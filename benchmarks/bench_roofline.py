@@ -1,0 +1,30 @@
+"""Roofline reader: renders EXPERIMENTS.md §Roofline from the dry-run
+artifacts (single-pod).  Fails soft if the sweep hasn't been run."""
+
+import os
+
+from repro.launch.roofline import analyze_dir, render_markdown
+
+
+def run(csv=False):
+    base = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "artifacts", "pod16x16"
+    )
+    if not os.path.isdir(base):
+        print("# no artifacts/pod16x16 — run: python -m repro.launch.dryrun --all")
+        return []
+    rows = analyze_dir(base)
+    print(render_markdown(rows, title="Roofline — pod16x16 (baseline artifacts)"))
+    live = [r for r in rows if not r.get("skip")]
+    print(f"cells_ok,{len(live)}")
+    print(f"cells_skipped,{len(rows) - len(live)}")
+    if live:
+        worst = min(live, key=lambda r: r["roofline_fraction"])
+        best = max(live, key=lambda r: r["roofline_fraction"])
+        print(f"best_fraction,{best['arch']}x{best['shape']},{best['roofline_fraction']:.3f}")
+        print(f"worst_fraction,{worst['arch']}x{worst['shape']},{worst['roofline_fraction']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

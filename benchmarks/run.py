@@ -1,0 +1,81 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only <name>]
+
+Sections:
+  stepcounts   paper Figs 1-2 (2n-1 vs 3n-2) + ICI-torus phase analogue
+  scramble     cycle structure/orders (7/7/20 + extension) + S^k throughput
+  symmetric    symmetric-product early readout (<= n+1+n/2)
+  kernels      mesh-matmul BlockSpec structure + allclose gate + GEMM context
+  distributed  Cannon phases, pipeline bubbles, ring-overlap wall-time
+  train        short real training run (loss trajectory) on the demo config
+  roofline     renders the dry-run roofline table (artifacts/pod16x16)
+"""
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (
+    bench_distributed,
+    bench_kernels,
+    bench_roofline,
+    bench_scramble,
+    bench_stepcounts,
+    bench_symmetric,
+)
+
+
+def bench_train():
+    """Short training run: the end-to-end sanity number for the harness."""
+    from repro.configs import get_config
+    from repro.launch.train import build_trainer
+
+    cfg = get_config("mesh-paper").reduced()
+    step_fn, state, data = build_trainer(cfg, batch=8, seq=64, lr=1e-3, total_steps=40)
+    losses = []
+    t0 = time.perf_counter()
+    for _ in range(40):
+        state, metrics = step_fn(state, next(data))
+        losses.append(float(metrics["loss"]))
+    dt = time.perf_counter() - t0
+    print("# short training run (mesh-paper reduced, 40 steps)")
+    print("steps,first_loss,last_loss,steps_per_s")
+    print(f"40,{losses[0]:.4f},{losses[-1]:.4f},{40/dt:.2f}")
+    assert losses[-1] < losses[0]
+    return losses
+
+
+SECTIONS = {
+    "stepcounts": bench_stepcounts.run,
+    "scramble": bench_scramble.run,
+    "symmetric": bench_symmetric.run,
+    "kernels": bench_kernels.run,
+    "distributed": bench_distributed.run,
+    "train": bench_train,
+    "roofline": bench_roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(SECTIONS))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SECTIONS)
+    failed = []
+    for name in names:
+        print(f"\n{'=' * 72}\n== bench: {name}\n{'=' * 72}")
+        t0 = time.perf_counter()
+        try:
+            SECTIONS[name]()
+            print(f"[{name}] done in {time.perf_counter() - t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        raise SystemExit(f"benchmark sections failed: {failed}")
+    print("\nALL BENCHES OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""The mesh array on the ICI torus: distributed systolic (Cannon) matmul
+with shard_map + ppermute, overlapped ring collectives, and the phase-count
+arithmetic that mirrors the paper's 2n-1 vs 3n-2 step saving.
+
+Relaunches itself with 4 virtual CPU devices if only 1 is present.
+
+  PYTHONPATH=src python examples/distributed_matmul.py
+"""
+
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_local_mesh
+from repro.parallel.collectives import ring_allgather_matmul
+from repro.parallel.systolic import phase_counts, systolic_matmul
+
+print(f"devices: {jax.device_count()}")
+mesh = make_local_mesh((2, 2), ("data", "model"))
+rng = np.random.default_rng(0)
+a = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+b = jnp.asarray(rng.normal(size=(32, 48)).astype(np.float32))
+
+# Cannon's algorithm = the paper's mesh array at block/device granularity;
+# on a switched torus the skew alignment is ONE collective-permute.
+c = systolic_matmul(a, b, mesh=mesh, axes=("data", "model"))
+assert np.allclose(np.asarray(c), np.asarray(a @ b), atol=1e-4)
+print("systolic (Cannon) matmul over 2x2 device mesh == A @ B ✓")
+
+for p in (2, 4, 16):
+    pc = phase_counts(p)
+    print(f"  p={p:2d}: switched-torus phases {pc['switched_phases']:3d} vs naive "
+          f"{pc['naive_phases']:3d}   (paper: mesh {pc['paper_mesh_steps']} vs "
+          f"standard {pc['paper_standard_steps']})")
+
+# Overlapped ring collective (TP building block): all_gather fused into the
+# partial matmuls — the 1D-ring form of the same overlap idea.
+mesh1d = make_local_mesh((4,), ("model",))
+x = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+w = jnp.asarray(rng.normal(size=(8, 12)).astype(np.float32))
+f = jax.jit(
+    jax.shard_map(
+        lambda xb, wb: ring_allgather_matmul(xb, wb, "model"),
+        mesh=mesh1d,
+        in_specs=(P("model", None), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+)
+assert np.allclose(np.asarray(f(x, w)), np.asarray(x @ w), atol=1e-4)
+print("ring all-gather matmul (comm/compute overlapped) == X @ W ✓")

@@ -1,0 +1,17 @@
+"""repro — the Kak mesh-array matrix-multiplication technique as a production
+JAX/TPU training + serving framework.
+
+Layers (see DESIGN.md):
+  core/       paper contribution: mesh-array simulators, scramble S, symmetries
+  kernels/    Pallas TPU kernels (staggered-k mesh matmul, scramble) + oracles
+  models/     10-architecture model zoo (dense/MoE/SSM/hybrid/enc-dec/VLM)
+  configs/    published architecture configs + reduced smoke variants
+  parallel/   DP/TP/EP/SP/PP sharding, distributed systolic matmul, compression
+  data/       deterministic resumable synthetic data pipeline
+  optim/      AdamW + schedules + ZeRO-1
+  checkpoint/ atomic async checkpointing + elastic re-mesh restore
+  train/      fault-tolerant training loop, serve loop
+  launch/     production mesh, multi-pod dry-run, roofline, train/serve CLIs
+"""
+
+__version__ = "1.0.0"

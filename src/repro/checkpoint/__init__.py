@@ -1,0 +1,4 @@
+from repro.checkpoint.async_writer import AsyncCheckpointer
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager", "AsyncCheckpointer"]

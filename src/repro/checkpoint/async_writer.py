@@ -1,0 +1,68 @@
+"""Async checkpointing: snapshot on the main thread, serialize on a worker.
+
+The train loop calls `submit(step, tree)`: leaves are fetched to host
+(device_get — cheap relative to serialization) and the npz write + rename
+happens on a background thread, so the TPUs keep stepping.  `wait()` drains
+the queue (called before exit and before any restore).  Errors surface on the
+next submit/wait — a failed write never silently drops a checkpoint.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Optional
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["AsyncCheckpointer"]
+
+
+class AsyncCheckpointer:
+    def __init__(self, manager: CheckpointManager):
+        self.manager = manager
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree, meta = item
+            try:
+                self.manager.save(step, host_tree, meta)
+            except BaseException as e:  # surfaced on next submit/wait
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self) -> None:
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    def submit(self, step: int, tree: Any, meta: Optional[dict] = None) -> None:
+        self._raise_pending()
+        # Snapshot NOW: device_get on an already-host numpy leaf is a no-op
+        # *reference*, so force a copy — otherwise the caller mutating the
+        # tree after submit() would corrupt the pending checkpoint.
+        import numpy as np
+
+        host_tree = jax.tree.map(
+            lambda leaf: np.array(jax.device_get(leaf), copy=True), tree
+        )
+        self._q.put((step, host_tree, meta))
+
+    def wait(self) -> None:
+        self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join()

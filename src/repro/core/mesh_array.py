@@ -1,0 +1,212 @@
+"""Cycle-accurate simulators for the Kak mesh array and the standard systolic array.
+
+These are the *reference semantics* of the paper: every node is a MAC cell
+(paper Fig. 3); the simulators advance global clock steps with `jax.lax.scan`
+(one scan step == one array clock step) and reproduce, cycle by cycle:
+
+  * mesh array:     2n-1 steps, output in the scrambled arrangement sigma_n,
+  * standard array: 3n-2 steps, output in the standard arrangement,
+  * symmetric-product early readout by ~ floor(3n/2) steps (paper: <= n+1+n/2).
+
+Schedules
+---------
+Node (i, j) of the mesh array performs its k-th MAC (k = 1..n) at step
+``start(i, j) + k - 1`` and computes c_{sigma(i,j)}.  Two start models are
+provided (the paper's figures are not machine-readable; both reproduce the
+2n-1 total and the sigma_n arrangement — see DESIGN.md §Paper-fidelity):
+
+  * ``antidiagonal`` (default): start = ceil((i+j)/2).  This is the timing
+    implied by the two-layered construction (A-diagonals paired with
+    B-anti-diagonals) and is the only model consistent with the paper's
+    symmetric-matrix claim of ~3n/2+1 steps — validated in
+    `core/symmetries.py` and `benchmarks/bench_symmetric.py`.
+  * ``corner``: start = max(i, j) (single-corner feeding, no wraparound).
+    Same 2n-1 total; no symmetric early-readout gain.
+
+The standard array uses start = i + j - 1 (the zero-padding skew), total 3n-2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scramble import _scramble_perm_np
+
+__all__ = [
+    "SimResult",
+    "mesh_start_times",
+    "standard_start_times",
+    "mesh_completion_times",
+    "standard_completion_times",
+    "simulate_mesh",
+    "simulate_standard",
+    "mesh_matmul_reference",
+]
+
+StartModel = Literal["antidiagonal", "corner"]
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Output of a cycle-accurate run.
+
+    output:           (n, n) accumulator state after the final step.  For the
+                      mesh array this is C in the *scrambled* arrangement;
+                      for the standard array it is C itself.
+    steps:            number of clock steps executed (2n-1 mesh, 3n-2 standard).
+    completion_times: (n, n) int32 — the step at which each node performed its
+                      final MAC.
+    history:          (steps, n, n) accumulator after every step (only if
+                      ``record_history=True``), used by the early-readout
+                      analysis in `core/symmetries.py`.
+    """
+
+    output: jax.Array
+    steps: int
+    completion_times: np.ndarray
+    history: jax.Array | None = None
+
+
+def mesh_start_times(n: int, model: StartModel = "antidiagonal") -> np.ndarray:
+    """(n, n) start step (1-indexed) of each mesh node."""
+    i = np.arange(1, n + 1)[:, None]
+    j = np.arange(1, n + 1)[None, :]
+    if model == "antidiagonal":
+        return (i + j + 1) // 2
+    if model == "corner":
+        return np.maximum(i, j)
+    raise ValueError(f"unknown start model {model!r}")
+
+
+def standard_start_times(n: int) -> np.ndarray:
+    """(n, n) start step of each standard-array node (zero-padding skew)."""
+    i = np.arange(1, n + 1)[:, None]
+    j = np.arange(1, n + 1)[None, :]
+    return i + j - 1
+
+
+def mesh_completion_times(n: int, model: StartModel = "antidiagonal") -> np.ndarray:
+    return mesh_start_times(n, model) + n - 1
+
+
+def standard_completion_times(n: int) -> np.ndarray:
+    return standard_start_times(n) + n - 1
+
+
+def _simulate(
+    a: jax.Array,
+    b: jax.Array,
+    start: np.ndarray,
+    p_idx: np.ndarray,
+    q_idx: np.ndarray,
+    total_steps: int,
+    record_history: bool,
+) -> Tuple[jax.Array, jax.Array | None]:
+    """Shared clock loop.
+
+    Node (i, j) accumulates a[p_idx[i,j], k] * b[k, q_idx[i,j]] where
+    k = t - start[i,j] (0-indexed MAC counter) whenever 0 <= k < n.
+    One scan iteration == one clock step, exactly as in the paper's Fig. 3
+    node semantics (multiply the incoming pair, add to the accumulator).
+    """
+    n = a.shape[0]
+    start_j = jnp.asarray(start)  # (n, n), 1-indexed step of first MAC
+    p_j = jnp.asarray(p_idx)  # (n, n) 0-indexed row of A consumed by the node
+    q_j = jnp.asarray(q_idx)  # (n, n) 0-indexed col of B consumed by the node
+
+    def step(acc, t):
+        k = t - start_j  # 0-indexed MAC counter at this node, this step
+        active = (k >= 0) & (k < n)
+        k_safe = jnp.clip(k, 0, n - 1)
+        # Incoming operand pair at each node for this clock tick.
+        a_val = a[p_j, k_safe]
+        b_val = b[k_safe, q_j]
+        acc = acc + jnp.where(active, a_val * b_val, jnp.zeros((), a.dtype))
+        return acc, (acc if record_history else None)
+
+    acc0 = jnp.zeros((n, n), dtype=jnp.result_type(a.dtype, b.dtype))
+    ts = jnp.arange(1, total_steps + 1)
+    final, hist = jax.lax.scan(step, acc0, ts)
+    return final, hist
+
+
+@partial(jax.jit, static_argnames=("model", "record_history"))
+def _simulate_mesh_jit(a, b, *, model: StartModel, record_history: bool):
+    n = a.shape[0]
+    perm = _scramble_perm_np(n)  # flat: cell -> (p*n+q)
+    p_idx = (perm // n).reshape(n, n)
+    q_idx = (perm % n).reshape(n, n)
+    start = mesh_start_times(n, model)
+    total = 2 * n - 1
+    return _simulate(a, b, start, p_idx, q_idx, total, record_history)
+
+
+def simulate_mesh(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    model: StartModel = "antidiagonal",
+    record_history: bool = False,
+) -> SimResult:
+    """Run the mesh array on n x n inputs; returns C in scrambled arrangement.
+
+    Asserts nothing — validation lives in tests, which check that
+    `unscramble(output) == a @ b` and that the step count is exactly 2n-1.
+    """
+    n = a.shape[0]
+    if a.shape != (n, n) or b.shape != (n, n):
+        raise ValueError(f"square n x n inputs required, got {a.shape} x {b.shape}")
+    out, hist = _simulate_mesh_jit(a, b, model=model, record_history=record_history)
+    return SimResult(
+        output=out,
+        steps=2 * n - 1,
+        completion_times=mesh_completion_times(n, model),
+        history=hist if record_history else None,
+    )
+
+
+@partial(jax.jit, static_argnames=("record_history",))
+def _simulate_standard_jit(a, b, *, record_history: bool):
+    n = a.shape[0]
+    idx = np.arange(n)
+    p_idx = np.broadcast_to(idx[:, None], (n, n))  # node (i,j) computes c_ij
+    q_idx = np.broadcast_to(idx[None, :], (n, n))
+    start = standard_start_times(n)
+    total = 3 * n - 2
+    return _simulate(a, b, start, p_idx, q_idx, total, record_history)
+
+
+def simulate_standard(
+    a: jax.Array, b: jax.Array, *, record_history: bool = False
+) -> SimResult:
+    """Run the standard (Mead–Conway/Kung) array; output in standard arrangement."""
+    n = a.shape[0]
+    if a.shape != (n, n) or b.shape != (n, n):
+        raise ValueError(f"square n x n inputs required, got {a.shape} x {b.shape}")
+    out, hist = _simulate_standard_jit(a, b, record_history=record_history)
+    return SimResult(
+        output=out,
+        steps=3 * n - 2,
+        completion_times=standard_completion_times(n),
+        history=hist if record_history else None,
+    )
+
+
+def mesh_matmul_reference(a: jax.Array, b: jax.Array) -> jax.Array:
+    """One-shot functional semantics of the mesh array: scrambled(a @ b).
+
+    Equivalent to ``simulate_mesh(a, b).output`` but as a single gather over
+    the XLA matmul — the form the Pallas kernel and the distributed systolic
+    matmul are tested against.
+    """
+    n = a.shape[-1]
+    c = a @ b
+    perm = jnp.asarray(_scramble_perm_np(n))
+    flat = c.reshape(*c.shape[:-2], n * n)
+    return jnp.take(flat, perm, axis=-1).reshape(c.shape)

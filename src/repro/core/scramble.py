@@ -1,0 +1,258 @@
+"""The mesh-array scrambling transformation S (Kak 2010).
+
+The mesh array computes C = AB but deposits c_{sigma(i,j)} at node (i,j) for a
+structured permutation sigma_n.  Multiplying by the identity exhibits sigma_n as
+a scrambling transformation S on the n^2 matrix entries; this module implements:
+
+  * the closed form of sigma_n (verified against every table printed in the
+    paper, n = 3..7),
+  * S / S^{-1} / S^k application (S^k in O(1) metadata via cycle decomposition,
+    never as k repeated gathers),
+  * cycle decomposition and the order of S (paper: 7 for n=3, 7 for n=4,
+    20 for n=5),
+  * flat-index permutation vectors consumed by the Pallas scramble kernel and
+    by the fused mesh-matmul output arrangement.
+
+Closed form (derived in DESIGN.md from the paper's anti-diagonal rule: "the
+first and the second subscripts are fixed in alternate diagonals and
+anti-diagonals", plus the zig-zag sequence along each anti-diagonal):
+
+  for 1-indexed cell (i, j) with d = i + j:
+      if d <= n + 1:  m, f, r = d - 1,      d - 1,      i
+      else:           m, f, r = 2n + 1 - d, 2n + 2 - d, i - (d - n) + 1
+      h = ceil(m / 2)
+      v = m - 2(r - 1)                      if r <= h
+        = 2(r - h)      (m odd)             otherwise
+        = 2(r - h) - 1  (m even)
+      sigma(i, j) = (f, v) if d even else (v, f)
+
+m is the anti-diagonal length, f the fixed subscript value, r the 1-indexed
+position along the anti-diagonal, v the zig-zag (m, m-2, ..., 1|2, ..., m-1)
+value.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "sigma",
+    "sigma_table",
+    "scramble_perm",
+    "inverse_perm",
+    "power_perm",
+    "apply_scramble",
+    "unscramble",
+    "apply_scramble_power",
+    "cycle_decomposition",
+    "scramble_order",
+    "block_scramble_perm",
+]
+
+
+def sigma(n: int, i: int, j: int) -> Tuple[int, int]:
+    """sigma_n applied to 1-indexed cell (i, j) -> 1-indexed subscripts (p, q).
+
+    Node (i, j) of the n x n mesh array computes c_{p,q} of C = AB.
+    """
+    if not (1 <= i <= n and 1 <= j <= n):
+        raise ValueError(f"cell ({i},{j}) out of range for n={n}")
+    d = i + j
+    if d <= n + 1:
+        m, f, r = d - 1, d - 1, i
+    else:
+        m, f, r = 2 * n + 1 - d, 2 * n + 2 - d, i - (d - n) + 1
+    h = (m + 1) // 2
+    if r <= h:
+        v = m - 2 * (r - 1)
+    else:
+        v = 2 * (r - h) if m % 2 == 1 else 2 * (r - h) - 1
+    return (f, v) if d % 2 == 0 else (v, f)
+
+
+@functools.lru_cache(maxsize=None)
+def sigma_table(n: int) -> Tuple[Tuple[Tuple[int, int], ...], ...]:
+    """The full n x n arrangement table: entry [i-1][j-1] = sigma(n, i, j)."""
+    return tuple(
+        tuple(sigma(n, i, j) for j in range(1, n + 1)) for i in range(1, n + 1)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _scramble_perm_np(n: int) -> np.ndarray:
+    """Flat permutation vector: scrambled.flat[cell] = standard.flat[perm[cell]].
+
+    cell = (i-1)*n + (j-1) indexes the mesh node; perm[cell] = (p-1)*n + (q-1)
+    where sigma(i, j) = (p, q).
+    """
+    perm = np.empty(n * n, dtype=np.int32)
+    for i in range(1, n + 1):
+        for j in range(1, n + 1):
+            p, q = sigma(n, i, j)
+            perm[(i - 1) * n + (j - 1)] = (p - 1) * n + (q - 1)
+    return perm
+
+
+def scramble_perm(n: int) -> np.ndarray:
+    """Flat gather indices realizing S (copy — safe to mutate)."""
+    return _scramble_perm_np(n).copy()
+
+
+def inverse_perm(perm: np.ndarray) -> np.ndarray:
+    """Inverse of a flat permutation vector."""
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0], dtype=perm.dtype)
+    return inv
+
+
+def power_perm(perm: np.ndarray, k: int) -> np.ndarray:
+    """perm composed with itself k times (k may be negative), via cycles.
+
+    O(n^2) regardless of k: each element advances k mod (its cycle length)
+    positions along its cycle.  This is what makes S^k usable as a keyed
+    scrambling system — the effective key is k mod order(S).
+    """
+    size = perm.shape[0]
+    out = np.empty_like(perm)
+    seen = np.zeros(size, dtype=bool)
+    for start in range(size):
+        if seen[start]:
+            continue
+        cyc = [start]
+        seen[start] = True
+        cur = int(perm[start])
+        while cur != start:
+            seen[cur] = True
+            cyc.append(cur)
+            cur = int(perm[cur])
+        clen = len(cyc)
+        shift = k % clen
+        for idx, elem in enumerate(cyc):
+            out[elem] = cyc[(idx + shift) % clen]
+    return out
+
+
+def cycle_decomposition(n: int) -> List[List[Tuple[int, int]]]:
+    """Cycles of S written over 1-indexed subscripts, paper convention.
+
+    The paper writes S as the permutation sending standard position (p, q) to
+    the mesh cell that holds c_{p,q}; cycles are traced through that map.
+    Reproduces e.g. n=4: (11)(42)(12 22 31 32 14 44 21)(13 33 41 34 23 24 43).
+    """
+    perm = _scramble_perm_np(n)
+    # position (p,q) content moves to cell inv[(p,q)] under one application.
+    inv = inverse_perm(perm)
+    seen = np.zeros(n * n, dtype=bool)
+    cycles: List[List[Tuple[int, int]]] = []
+    for start in range(n * n):
+        if seen[start]:
+            continue
+        cyc = []
+        cur = start
+        while not seen[cur]:
+            seen[cur] = True
+            cyc.append((cur // n + 1, cur % n + 1))
+            cur = int(inv[cur])
+        cycles.append(cyc)
+    return cycles
+
+
+@functools.lru_cache(maxsize=None)
+def scramble_order(n: int) -> int:
+    """Order (period) of S: lcm of cycle lengths.  Paper: 7, 7, 20 for n=3,4,5."""
+    return math.lcm(*[len(c) for c in cycle_decomposition(n)])
+
+
+# ---------------------------------------------------------------------------
+# JAX application.  These are the public "scrambling system" entry points used
+# by the models (privacy transform) and by examples/scrambling_demo.py.
+# ---------------------------------------------------------------------------
+
+
+def apply_scramble(x: jax.Array, k: int = 1) -> jax.Array:
+    """Apply S^k to the trailing two (n, n) dims of x.
+
+    k may be negative (unscrambling).  The permutation is compile-time
+    metadata: lowering produces a single gather regardless of |k|.
+    """
+    n = x.shape[-1]
+    if x.shape[-2] != n:
+        raise ValueError(f"apply_scramble needs trailing (n, n) dims, got {x.shape}")
+    perm = power_perm(_scramble_perm_np(n), k)
+    flat = x.reshape(*x.shape[:-2], n * n)
+    out = jnp.take(flat, jnp.asarray(perm), axis=-1)
+    return out.reshape(x.shape)
+
+
+def unscramble(x: jax.Array, k: int = 1) -> jax.Array:
+    """Inverse of apply_scramble — recover the standard arrangement."""
+    return apply_scramble(x, -k)
+
+
+def apply_scramble_power(x: jax.Array, k: jax.Array, n: int) -> jax.Array:
+    """S^k with *traced* integer k (runtime key), trailing dims (n, n).
+
+    Precomputes all `order(S)` distinct powers as a (order, n*n) table and
+    gathers the k-th row — O(order * n^2) constant data, one dynamic gather.
+    This is the keyed-scrambler primitive: the key space is Z_order.
+    """
+    order = scramble_order(n)
+    base = _scramble_perm_np(n)
+    table = np.stack([power_perm(base, p) for p in range(order)])  # (order, n*n)
+    perm_k = jnp.asarray(table)[k % order]
+    flat = x.reshape(*x.shape[:-2], n * n)
+    out = jnp.take(flat, perm_k, axis=-1)
+    return out.reshape(x.shape)
+
+
+def sigma_traced(n: int, i, j):
+    """Closed-form sigma_n on traced 0-indexed block indices (i, j) -> (p, q).
+
+    Pure arithmetic on the index args (no captured arrays), so it is legal
+    inside a Pallas BlockSpec index_map — the permutation is evaluated on the
+    TPU scalar core as part of the block schedule.  n is a static Python int.
+    """
+    i1, j1 = i + 1, j + 1
+    d = i1 + j1
+    low = d <= n + 1
+    m = jnp.where(low, d - 1, 2 * n + 1 - d)
+    f = jnp.where(low, d - 1, 2 * n + 2 - d)
+    r = jnp.where(low, i1, i1 - (d - n) + 1)
+    h = (m + 1) // 2
+    v = jnp.where(
+        r <= h,
+        m - 2 * (r - 1),
+        jnp.where(m % 2 == 1, 2 * (r - h), 2 * (r - h) - 1),
+    )
+    even = d % 2 == 0
+    p = jnp.where(even, f, v)
+    q = jnp.where(even, v, f)
+    return p - 1, q - 1
+
+
+def block_scramble_perm(n_blocks: int) -> np.ndarray:
+    """sigma at block granularity: permutation of an (n_blocks x n_blocks) tile
+    grid.  Used by the Pallas mesh-matmul kernel to fuse the paper's output
+    arrangement into the output BlockSpec index_map at zero byte cost."""
+    return _scramble_perm_np(n_blocks).copy()
+
+
+def scrambled_cell_of(n: int, p: int, q: int) -> Tuple[int, int]:
+    """Which mesh cell (i, j) holds c_{p,q}?  (All args/results 1-indexed.)"""
+    inv = inverse_perm(_scramble_perm_np(n))
+    cell = int(inv[(p - 1) * n + (q - 1)])
+    return cell // n + 1, cell % n + 1
+
+
+def format_table(n: int) -> str:
+    """Render the arrangement table in the paper's `pq` notation (for docs/benches)."""
+    rows = []
+    for row in sigma_table(n):
+        rows.append(" ".join(f"{p}{q}" if n < 10 else f"{p},{q}" for p, q in row))
+    return "\n".join(rows)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticLM, pack_documents
+
+__all__ = ["DataConfig", "SyntheticLM", "pack_documents"]

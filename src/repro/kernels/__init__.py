@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the mesh-array technique + jit wrappers and oracles.
+
+mesh_matmul.py      staggered-k blocked matmul (+ fused scramble output)
+scramble_kernel.py  S^k as a scalar-prefetch block-permutation kernel
+ops.py              public dispatch (xla | pallas_mesh | pallas_mesh_scrambled)
+ref.py              pure-jnp oracles all kernels are tested against
+"""
+
+from repro.kernels.ops import (
+    get_default_backend,
+    matmul,
+    scramble_blocks,
+    set_default_backend,
+)
+
+__all__ = ["matmul", "scramble_blocks", "set_default_backend", "get_default_backend"]

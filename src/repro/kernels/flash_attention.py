@@ -1,0 +1,176 @@
+"""Pallas TPU kernel: flash attention (tiled online-softmax SDPA).
+
+The jnp chunked path (models/attention._sdpa_chunked) removes the O(T^2)
+*resident* score tensor but still materializes one (Tq, C) block per chunk in
+HBM — XLA won't keep a 32k-row block in VMEM.  This kernel tiles BOTH q and
+kv: each grid cell owns a (block_q, head_dim) query tile, loops over kv tiles
+with the (m, l, acc) online-softmax recurrence entirely in VMEM scratch, and
+writes only the final (block_q, head_dim) output — HBM traffic is exactly
+Q + K + V + O.
+
+Grid: (batch*kv_heads, num_q_blocks, num_kv_blocks); the kv axis is the
+innermost (sequential) dimension; q/batch axes are parallel.  GQA is handled
+by folding the `rep` q-heads-per-kv-head into the q tile's row dimension.
+
+Validated against kernels/ref.sdpa_ref in interpret mode (tests/
+test_flash_kernel.py sweeps shapes, dtypes, causal on/off); the compiled
+path targets TPU (dimension_semantics marks the kv axis "arbitrary").
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _HAVE_PLTPU = True
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _HAVE_PLTPU = False
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (block_q, hd)
+    k_ref,  # (block_k, hd)
+    v_ref,  # (block_k, hd)
+    o_ref,  # (block_q, hd)
+    m_ref,  # VMEM (block_q,) running max
+    l_ref,  # VMEM (block_q,) running denominator
+    acc_ref,  # VMEM (block_q, hd) f32 accumulator
+    *,
+    nk: int,
+    block_q: int,
+    block_k: int,
+    causal: bool,
+    rep: int,
+    scale: float,
+):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qb = pl.program_id(1)
+    s = jnp.dot(
+        q_ref[...], k_ref[...].T, preferred_element_type=jnp.float32
+    ) * scale  # (block_q, block_k)
+    if causal:
+        # q rows fold `rep` heads: token index = row // rep
+        qpos = (qb * block_q + jax.lax.iota(jnp.int32, block_q)) // rep
+        kpos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(qpos[:, None] >= kpos[None, :], s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kb == nk - 1)
+    def _flush():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows (never for causal)
+        o_ref[...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, Tq, H, hd)
+    k: jax.Array,  # (B, Tk, KV, hd)
+    v: jax.Array,  # (B, Tk, KV, hd)
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """HBM-optimal SDPA: traffic = Q + K + V + O.  Tq*rep %% block_q == 0 and
+    Tk %% block_k == 0 required (model seq lens are powers of two)."""
+    b, tq, h, hd = q.shape
+    tk, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    scale = hd**-0.5
+
+    # fold (B, KV) into the grid's parallel axis and `rep` into q rows:
+    # q rows are ordered (token, rep) so causal indexing is row // rep.
+    qf = (
+        q.reshape(b, tq, kvh, rep, hd)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(b * kvh, tq * rep, hd)
+    )
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, tk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, tk, hd)
+
+    rows = tq * rep
+    if rows % block_q or tk % block_k:
+        raise ValueError(
+            f"(Tq*rep={rows}, Tk={tk}) not divisible by blocks ({block_q},{block_k})"
+        )
+    nq, nk = rows // block_q, tk // block_k
+
+    if _HAVE_PLTPU:
+        scratch = [
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ]
+    else:  # pragma: no cover
+        scratch = [
+            pl.MemorySpace.ANY((block_q,), jnp.float32),
+            pl.MemorySpace.ANY((block_q,), jnp.float32),
+            pl.MemorySpace.ANY((block_q, hd), jnp.float32),
+        ]
+
+    compiler_params = None
+    if _HAVE_PLTPU and not interpret:  # pragma: no cover — TPU-only path
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
+
+    kernel = functools.partial(
+        _flash_kernel,
+        nk=nk,
+        block_q=block_q,
+        block_k=block_k,
+        causal=causal,
+        rep=rep,
+        scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kvh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((None, block_k, hd), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((None, block_k, hd), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, rows, hd), q.dtype),
+        scratch_shapes=scratch,
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    return (
+        out.reshape(b, kvh, tq, rep, hd).transpose(0, 2, 1, 3, 4).reshape(b, tq, h, hd)
+    )

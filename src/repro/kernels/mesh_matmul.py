@@ -1,0 +1,172 @@
+"""Pallas TPU kernel: blocked matmul with the mesh-array staggered-k schedule.
+
+TPU adaptation of the paper (DESIGN.md §2).  The paper's mesh array removes
+the zero-padding skew of the standard systolic array by letting node (i, j)
+start immediately and accept a permuted output arrangement.  At TPU block
+granularity the same idea becomes:
+
+  * **Staggered k-loop** — output tile (i, j) runs its contraction loop in the
+    rotated order k_eff = (i + j + k) mod nk.  Concurrently-active grid cells
+    therefore stream *disjoint* (A row-block, B col-block) pairs from HBM into
+    VMEM instead of all touching k=0 first — the memory-system analogue of the
+    paper's "no zeros are padded in its inputs" feeding discipline (and the
+    block-level form of Cannon's alignment).
+  * **Fused scramble output** — optionally the grid cell (i, j) computes the
+    *standard* block sigma(i, j) and writes it at cell (i, j), so the output
+    lands in the paper's scrambled arrangement at zero extra bytes: the
+    permutation is folded into the output BlockSpec index_map exactly as the
+    array's wiring folds it into node placement.
+
+The kernel accumulates in a float32 VMEM scratch across the arbitrary
+(sequential) k dimension and casts once on the final k step.  Block shapes
+default to MXU-aligned (128, 128, 128).
+
+Validated on CPU with interpret=True against `repro.kernels.ref` oracles;
+compiled path targets TPU (dimension_semantics marks i/j parallel).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific extras are importable on CPU builds of jax as well.
+    from jax.experimental.pallas import tpu as pltpu
+
+    _HAVE_PLTPU = True
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _HAVE_PLTPU = False
+
+from repro.core.scramble import sigma_traced
+
+__all__ = ["mesh_matmul_pallas"]
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    """Grid (i, j, k): accumulate a_ref @ b_ref into acc, flush on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _stagger(i, j, k, nk):
+    """The mesh-array rotation: which k-block cell (i, j) consumes at phase k."""
+    return jax.lax.rem(i + j + k, nk)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block_m",
+        "block_n",
+        "block_k",
+        "stagger",
+        "scramble_out",
+        "out_dtype",
+        "interpret",
+    ),
+)
+def mesh_matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    stagger: bool = True,
+    scramble_out: bool = False,
+    out_dtype: Optional[jnp.dtype] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = A @ B on the mesh-array schedule.
+
+    Args:
+      a: (M, K);  b: (K, N).  M, N, K must divide by the block shape (the
+        `ops.matmul` wrapper pads arbitrary shapes).
+      stagger: rotate each tile's k-loop by (i + j) mod nk (the paper's
+        no-padding feeding).  False gives the standard k-ordered schedule —
+        kept selectable so benchmarks can compare the two schedules.
+      scramble_out: land the output in the paper's scrambled block
+        arrangement (requires a square output block grid).
+      interpret: run the kernel body in Python on CPU (validation mode).
+    """
+    m, k_dim = a.shape
+    k2, n = b.shape
+    if k_dim != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    if m % block_m or n % block_n or k_dim % block_k:
+        raise ValueError(
+            f"shape ({m},{k_dim})x({k2},{n}) not divisible by blocks "
+            f"({block_m},{block_n},{block_k})"
+        )
+    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+    nm, nn, nk = m // block_m, n // block_n, k_dim // block_k
+
+    if scramble_out:
+        if nm != nn:
+            raise ValueError(f"scramble_out needs square block grid, got {nm}x{nn}")
+
+        # Cell (i, j) computes standard block (p, q) = sigma(i, j): reads A
+        # row-block p and B col-block q, writes at cell (i, j).  The output
+        # permutation is pure index_map arithmetic (evaluated on the scalar
+        # core) — zero extra data movement.
+        def a_map(i, j, k):
+            p, _ = sigma_traced(nm, i, j)
+            return p, _stagger(i, j, k, nk) if stagger else k
+
+        def b_map(i, j, k):
+            _, q = sigma_traced(nm, i, j)
+            return _stagger(i, j, k, nk) if stagger else k, q
+
+    else:
+
+        def a_map(i, j, k):
+            return i, _stagger(i, j, k, nk) if stagger else k
+
+        def b_map(i, j, k):
+            return _stagger(i, j, k, nk) if stagger else k, j
+
+    def o_map(i, j, k):
+        return i, j
+
+    scratch = (
+        [pltpu.VMEM((block_m, block_n), jnp.float32)]
+        if _HAVE_PLTPU
+        else [pl.MemorySpace.ANY((block_m, block_n), jnp.float32)]  # pragma: no cover
+    )
+
+    compiler_params = None
+    if _HAVE_PLTPU and not interpret:  # pragma: no cover — TPU-only path
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), a_map),
+            pl.BlockSpec((block_k, block_n), b_map),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), o_map),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=scratch,
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,199 @@
+"""Public GEMM / scramble entry points — the framework's matmul dispatch layer.
+
+Every dense layer in `repro.models` routes its projections through
+`repro.kernels.ops.matmul`, making the paper's kernel a first-class selectable
+GEMM backend:
+
+  backend="xla"          jnp.dot (default for pjit'd full-scale graphs — XLA
+                         owns the sharded GEMM + collective schedule there)
+  backend="pallas_mesh"  the Pallas mesh-array staggered-k kernel
+  backend="pallas_mesh_scrambled"
+                         same, with the paper's S fused into the output
+                         BlockSpec (square block grids only)
+
+The wrapper pads arbitrary shapes up to block multiples, folds leading batch
+dims, and on CPU runs Pallas in interpret mode automatically (TPU compiles).
+A process-wide default backend can be installed with `set_default_backend`
+(used by configs' `use_mesh_kernel` flag).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.mesh_matmul import mesh_matmul_pallas
+from repro.kernels.scramble_kernel import scramble_blocks_pallas
+
+__all__ = ["matmul", "scramble_blocks", "set_default_backend", "get_default_backend"]
+
+_DEFAULT_BACKEND = "xla"
+_VALID = ("xla", "pallas_mesh", "pallas_mesh_scrambled")
+
+
+def set_default_backend(backend: str) -> None:
+    global _DEFAULT_BACKEND
+    if backend not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID}, got {backend!r}")
+    _DEFAULT_BACKEND = backend
+
+
+def get_default_backend() -> str:
+    return _DEFAULT_BACKEND
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _mm_impl(a2: jax.Array, b2: jax.Array, opts) -> jax.Array:
+    """2D mesh-kernel matmul with padding to block multiples."""
+    block_m, block_n, block_k, stagger, scramble, out_dtype, interpret = opts
+    m, _ = a2.shape
+    _, n = b2.shape
+    ap = _pad_to(_pad_to(a2, block_m, 0), block_k, 1)
+    bp = _pad_to(_pad_to(b2, block_k, 0), block_n, 1)
+    if scramble and (ap.shape[0] != m or bp.shape[1] != n):
+        raise ValueError(
+            "pallas_mesh_scrambled requires block-aligned M and N "
+            f"(got M={m}, N={n} with blocks {block_m}x{block_n})"
+        )
+    out = mesh_matmul_pallas(
+        ap,
+        bp,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        stagger=stagger,
+        scramble_out=scramble,
+        out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+# pallas_call has no JVP rule, so training graphs need an explicit VJP:
+# the backward of C = A @ B is two more mesh-kernel matmuls
+# (dA = g Bᵀ, dB = Aᵀ g); for the scrambled backend C = S(AB), the cotangent
+# is unscrambled (a pure gather — the permutation's own transpose) first.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _mm(a2: jax.Array, b2: jax.Array, opts) -> jax.Array:
+    return _mm_impl(a2, b2, opts)
+
+
+def _mm_fwd(a2, b2, opts):
+    return _mm_impl(a2, b2, opts), (a2, b2)
+
+
+def _mm_bwd(opts, res, g):
+    a2, b2 = res
+    block_m, block_n, block_k, stagger, scramble, _, interpret = opts
+    if scramble:
+        g = ref.unscramble_blocks_ref(g, block_m=block_m, block_n=block_n)
+    gf = g.astype(jnp.float32)
+    opts_a = (block_m, block_k, block_n, stagger, False, jnp.float32, interpret)
+    opts_b = (block_k, block_n, block_m, stagger, False, jnp.float32, interpret)
+    da = _mm(gf, b2.T.astype(jnp.float32), opts_a)
+    db = _mm(a2.T.astype(jnp.float32), gf, opts_b)
+    return da.astype(a2.dtype), db.astype(b2.dtype)
+
+
+_mm.defvjp(_mm_fwd, _mm_bwd)
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    backend: Optional[str] = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    stagger: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    """General matmul over the trailing two dims: (..., M, K) @ (K, N) or
+    batched (..., M, K) @ (..., K, N)."""
+    backend = backend or _DEFAULT_BACKEND
+    if backend not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID}, got {backend!r}")
+    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+
+    if backend == "xla":
+        return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+    scramble = backend == "pallas_mesh_scrambled"
+    opts = (block_m, block_n, block_k, stagger, scramble, jnp.dtype(out_dtype), not _on_tpu())
+
+    def one(a2: jax.Array, b2: jax.Array) -> jax.Array:
+        return _mm(a2, b2, opts)
+
+    if a.ndim == 2 and b.ndim == 2:
+        return one(a, b)
+    # Fold leading batch dims of `a`; broadcast or batch `b`.
+    if b.ndim == 2:
+        lead = a.shape[:-2]
+        out = one(a.reshape(-1, a.shape[-1]) if a.ndim > 2 else a, b)
+        return out.reshape(*lead, a.shape[-2], b.shape[-1]) if a.ndim > 2 else out
+    # Fully batched: vmap over shared leading dims.
+    if a.shape[:-2] != b.shape[:-2]:
+        raise ValueError(f"batch dims mismatch: {a.shape} vs {b.shape}")
+    lead = a.shape[:-2]
+    af = a.reshape(-1, *a.shape[-2:])
+    bf = b.reshape(-1, *b.shape[-2:])
+    out = jax.vmap(one)(af, bf)
+    return out.reshape(*lead, *out.shape[-2:])
+
+
+# The permutation's linearization is itself; its transpose is the inverse
+# permutation — so S^k's VJP is S^{-k} applied to the cotangent.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _scramble_pallas_vjp(x: jax.Array, opts) -> jax.Array:
+    block_m, block_n, k, interpret = opts
+    return scramble_blocks_pallas(
+        x, block_m=block_m, block_n=block_n, k=k, interpret=interpret
+    )
+
+
+def _scr_fwd(x, opts):
+    return _scramble_pallas_vjp(x, opts), None
+
+
+def _scr_bwd(opts, _, g):
+    block_m, block_n, k, interpret = opts
+    return (_scramble_pallas_vjp(g, (block_m, block_n, -k, interpret)),)
+
+
+_scramble_pallas_vjp.defvjp(_scr_fwd, _scr_bwd)
+
+
+def scramble_blocks(
+    x: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    k: int = 1,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """S^k at block granularity on the trailing (m, n) dims."""
+    if not use_pallas:
+        out = x
+        fn = ref.scramble_blocks_ref if k >= 0 else ref.unscramble_blocks_ref
+        for _ in range(abs(k)):
+            out = fn(out, block_m=block_m, block_n=block_n)
+        return out
+    return _scramble_pallas_vjp(x, (block_m, block_n, k, not _on_tpu()))

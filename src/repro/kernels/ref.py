@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert_allclose against these.
+They define the *semantics*; the kernels define the *schedule*.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scramble import _scramble_perm_np
+
+__all__ = [
+    "matmul_ref",
+    "mesh_matmul_ref",
+    "scramble_blocks_ref",
+    "unscramble_blocks_ref",
+]
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """C = A @ B with f32 accumulation (the MXU contract)."""
+    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _block_perm_pq(n_blocks: int):
+    perm = _scramble_perm_np(n_blocks)
+    return perm // n_blocks, perm % n_blocks  # (p, q) block held at each cell
+
+
+def mesh_matmul_ref(
+    a: jax.Array, b: jax.Array, *, block_m: int, block_n: int, out_dtype=None
+) -> jax.Array:
+    """Scrambled-output matmul: cell-block (i,j) of the result holds standard
+    block sigma(i,j) of A @ B.  Requires a square (g x g) output block grid.
+    """
+    m, n = a.shape[0], b.shape[1]
+    gm, gn = m // block_m, n // block_n
+    if gm != gn:
+        raise ValueError(f"scrambled output needs a square block grid, got {gm}x{gn}")
+    c = matmul_ref(a, b, out_dtype)
+    return scramble_blocks_ref(c, block_m=block_m, block_n=block_n)
+
+
+def scramble_blocks_ref(x: jax.Array, *, block_m: int, block_n: int) -> jax.Array:
+    """Apply the paper's S at block granularity to the trailing 2 dims of x."""
+    m, n = x.shape[-2], x.shape[-1]
+    g = m // block_m
+    if g != n // block_n or g * block_m != m or g * block_n != n:
+        raise ValueError(f"(m={m}, n={n}) not a square grid of ({block_m},{block_n}) blocks")
+    p_idx, q_idx = _block_perm_pq(g)
+    lead = x.shape[:-2]
+    blocks = x.reshape(*lead, g, block_m, g, block_n)
+    blocks = jnp.moveaxis(blocks, -2, -3)  # (..., g, g, bm, bn)
+    flat = blocks.reshape(*lead, g * g, block_m, block_n)
+    gathered = jnp.take(flat, jnp.asarray(p_idx * g + q_idx), axis=-3)
+    out = gathered.reshape(*lead, g, g, block_m, block_n)
+    out = jnp.moveaxis(out, -2, -3)
+    return out.reshape(*lead, m, n)
+
+
+def unscramble_blocks_ref(x: jax.Array, *, block_m: int, block_n: int) -> jax.Array:
+    """Inverse of scramble_blocks_ref."""
+    m, n = x.shape[-2], x.shape[-1]
+    g = m // block_m
+    perm = _scramble_perm_np(g)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0], dtype=perm.dtype)
+    lead = x.shape[:-2]
+    blocks = x.reshape(*lead, g, block_m, g, block_n)
+    blocks = jnp.moveaxis(blocks, -2, -3)
+    flat = blocks.reshape(*lead, g * g, block_m, block_n)
+    gathered = jnp.take(flat, jnp.asarray(inv), axis=-3)
+    out = gathered.reshape(*lead, g, g, block_m, block_n)
+    out = jnp.moveaxis(out, -2, -3)
+    return out.reshape(*lead, m, n)

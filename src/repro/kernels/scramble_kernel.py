@@ -1,0 +1,92 @@
+"""Pallas kernel: the scrambling transformation S at block granularity.
+
+Pure data-movement kernel — the permutation lives entirely in the block
+schedule: the S^k permutation table is passed via *scalar prefetch* (SMEM),
+and the input BlockSpec index_map reads it on the TPU scalar core, so the
+kernel body is a single VMEM copy.  This demonstrates the paper's point that
+S is "free" when folded into an array's wiring: on TPU the wiring is the
+HBM->VMEM block schedule.
+
+S^k for any integer k composes at trace time via the cycle decomposition
+(`power_perm`) — the lowered kernel is identical for every k.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _HAVE_PLTPU = True
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _HAVE_PLTPU = False
+
+from repro.core.scramble import _scramble_perm_np, power_perm
+
+__all__ = ["scramble_blocks_pallas"]
+
+
+def _copy_kernel(perm_ref, x_ref, o_ref):
+    del perm_ref  # consumed by the index_map only
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "k", "interpret"))
+def scramble_blocks_pallas(
+    x: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    k: int = 1,
+    interpret: bool = False,
+) -> jax.Array:
+    """Apply S^k to x's trailing (m, n) dims at (block_m, block_n) granularity.
+
+    m/block_m must equal n/block_n (square block grid g x g); S is the paper's
+    permutation on the g^2 blocks.  Negative k unscrambles.
+    """
+    m, n = x.shape[-2], x.shape[-1]
+    g = m // block_m
+    if g * block_m != m or g * block_n != n or g != n // block_n:
+        raise ValueError(
+            f"(m={m}, n={n}) is not a square g x g grid of ({block_m},{block_n}) blocks"
+        )
+    if x.ndim != 2:
+        # Batch dims handled by vmap; the kernel itself stays 2D.
+        lead = x.shape[:-2]
+        out = jax.vmap(
+            lambda t: scramble_blocks_pallas(
+                t, block_m=block_m, block_n=block_n, k=k, interpret=interpret
+            )
+        )(x.reshape(-1, m, n))
+        return out.reshape(*lead, m, n)
+
+    perm = jnp.asarray(power_perm(_scramble_perm_np(g), k), dtype=jnp.int32)
+
+    def in_map(i, j, perm_ref):
+        src = perm_ref[i * g + j]
+        return src // g, src % g
+
+    def out_map(i, j, perm_ref):
+        del perm_ref
+        return i, j
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g, g),
+        in_specs=[pl.BlockSpec((block_m, block_n), in_map)],
+        out_specs=pl.BlockSpec((block_m, block_n), out_map),
+    )
+
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(perm, x)

@@ -1,0 +1,106 @@
+"""Parse collective traffic out of compiled (post-SPMD) HLO text.
+
+`compiled.cost_analysis()` gives FLOPs and HBM bytes but NOT collective
+traffic, so the roofline's third term comes from scanning the per-device HLO
+for all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops, summing their payload bytes, and applying ring-cost multipliers:
+
+    all-gather        (n-1)/n * result_bytes       per device through a link
+    reduce-scatter    (n-1)/n * operand_bytes
+    all-reduce        2 (n-1)/n * operand_bytes    (RS + AG)
+    all-to-all        (n-1)/n * operand_bytes
+    collective-permute  operand_bytes              (one neighbour hop)
+
+n = replica-group size parsed per op.  Orthogonal-axis collectives could use
+disjoint links concurrently; we conservatively serialize (documented in
+EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+__all__ = ["collective_stats", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %all-reduce.5 = f32[16,1024]{1,0} all-reduce(f32[16,1024]{1,0} %x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * DTYPE_BYTES[dtype]
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {op_kind: {"count", "payload_bytes", "link_bytes"}} (per device).
+
+    link_bytes applies the ring multiplier; payload_bytes is the raw result
+    size.  '-done' ops are skipped (counted at '-start').
+    """
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "payload_bytes": 0.0, "link_bytes": 0.0}
+    )
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_body, dtype, dims, kind = m.groups()
+        if tuple_body is not None:
+            payload = sum(
+                _shape_bytes(dt, dm) for dt, dm in _SHAPE_RE.findall(tuple_body)
+            )
+            # async tuples carry (operand, result): count the result half
+            payload //= 2 if kind != "all-to-all" else 1
+        else:
+            payload = _shape_bytes(dtype, dims)
+        # group size n
+        n = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len([x for x in g.group(1).split(",") if x.strip()])
+        else:
+            g2 = _GROUPS_V2_RE.search(line)
+            if g2:
+                n = int(g2.group(2))
+        n = max(n, 2)
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            link = 2 * frac * payload
+        elif kind == "collective-permute":
+            link = float(payload)
+        else:
+            link = frac * payload
+        s = stats[kind]
+        s["count"] += 1
+        s["payload_bytes"] += float(payload)
+        s["link_bytes"] += link
+    return dict(stats)

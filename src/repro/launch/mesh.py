@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run forces 512 host
+devices via XLA_FLAGS before first jax init, while tests/benches must see 1.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_local_mesh", "PROD_TP"]
+
+PROD_TP = 16  # 'model' axis size on the production meshes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips multi-pod.
+
+    Axes: ('data', 'model') single-pod, ('pod', 'data', 'model') multi-pod
+    ('pod' composes with 'data' as outer DP; PP over 'pod' is available via
+    parallel/pipeline.py but the graded dry-runs use DP x TP — DESIGN.md §4).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(shape, axes):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,102 @@
+"""Batched serving driver: prefill + greedy decode with a KV/recurrent cache.
+
+The inference-side end-to-end example (the dry-run lowers the same
+`prefill_step` / `serve_step` functions at production shapes; this driver
+runs them for real at reduced shapes on CPU, or full shapes on a TPU
+runtime).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import ShardCtx, get_model
+from repro.train.train_step import make_prefill_step, make_serve_step
+
+__all__ = ["generate", "main"]
+
+
+def generate(
+    model,
+    params,
+    prompts: jax.Array,  # (B, T_prompt) int32
+    *,
+    gen_len: int,
+    ctx: ShardCtx = ShardCtx(),
+    greedy: bool = True,
+):
+    """Prefill the prompts then decode `gen_len` tokens greedily.
+
+    Returns (tokens (B, gen_len), steps_per_s). Works for every family with a
+    decode path (dense/moe/ssm/hybrid/vlm text-only prompts; audio is
+    enc-dec and served via its own frames batch — see tests).
+    """
+    cfg = model.cfg
+    b, t_prompt = prompts.shape
+    prefill = jax.jit(make_prefill_step(model, ctx))
+    serve = jax.jit(make_serve_step(model, ctx), donate_argnums=(2,))
+
+    batch = {"tokens": prompts, "labels": prompts}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros((b, cfg.num_stub_patches, cfg.d_model), cfg.adtype)
+    next_tok, state = prefill(params, batch)
+    # Grow caches to prompt+gen capacity where the family uses KV caches:
+    # prefill returns length-T caches; decode writes at position `pos`, so we
+    # pad the cache length dim up front (recurrent families carry O(1) state).
+    if cfg.family in ("dense", "moe", "vlm"):
+        pad = gen_len
+        state = jax.tree.map(
+            lambda c: jnp.pad(c, [(0, 0), (0, 0), (0, pad)] + [(0, 0)] * (c.ndim - 3)),
+            state,
+        )
+
+    toks = [next_tok]
+    pos = t_prompt + (cfg.num_stub_patches if cfg.family == "vlm" else 0)
+    t0 = time.monotonic()
+    for i in range(gen_len - 1):
+        next_tok, state = serve(params, toks[-1][:, None], state, jnp.int32(pos + i))
+        toks.append(next_tok)
+    jax.block_until_ready(toks[-1])
+    dt = time.monotonic() - t0
+    steps_per_s = (gen_len - 1) / dt if dt > 0 else float("inf")
+    return jnp.stack(toks, axis=1), steps_per_s
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.family == "audio":
+        raise SystemExit("audio (whisper) serving is exercised in tests with a frames batch")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(args.seed + 1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    ).astype(jnp.int32)
+
+    out, rate = generate(model, params, prompts, gen_len=args.gen)
+    print(f"[serve] {args.arch} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
+    print(f"[serve] decode steps/s: {rate:.2f}  ({rate * args.batch:.1f} tok/s batched)")
+    print(f"[serve] sample row 0: {np.asarray(out[0])[:16]}")
+
+
+if __name__ == "__main__":
+    main()

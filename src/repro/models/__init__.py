@@ -1,0 +1,6 @@
+"""Model zoo: shared layers + 10 assigned architectures via a uniform API."""
+
+from repro.models.layers import ShardCtx, softmax_xent
+from repro.models.registry import Model, get_model
+
+__all__ = ["Model", "get_model", "ShardCtx", "softmax_xent"]

@@ -1,0 +1,182 @@
+"""Shared building blocks: param specs, norms, RoPE, embeddings, MLPs.
+
+Single-source-of-truth parameter system: each model family defines a
+`param_specs(cfg)` tree whose leaves are `PSpec(shape, logical_axes, scale,
+dtype)`.  From that one tree we derive
+  * `init_params`      — real arrays (smoke tests / examples / training),
+  * `abstract_params`  — ShapeDtypeStructs (dry-run lowering, no allocation),
+  * `logical_axes`     — the sharding tree consumed by parallel/sharding.py.
+
+All GEMMs go through `repro.kernels.ops.matmul` so the paper's Pallas kernel
+is a selectable backend (cfg.use_mesh_kernel); under pjit the default XLA
+backend is used and sharding constraints carry the TP layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import matmul as _matmul
+
+__all__ = [
+    "PSpec",
+    "init_params",
+    "abstract_params",
+    "logical_axes_tree",
+    "ShardCtx",
+    "dense",
+    "rmsnorm",
+    "RotaryTable",
+    "apply_rope",
+    "softmax_xent",
+    "gemm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """Declarative parameter: shape + logical sharding axes + init scale."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    scale: float = 0.02
+    dtype: Any = None  # filled from cfg.param_dtype at materialization
+    init: str = "normal"  # normal | zeros | ones
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def _is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def init_params(key: jax.Array, specs, dtype) -> Any:
+    """Materialize a PSpec tree into real arrays (deterministic per-path keys)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_pspec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        dt = s.dtype or dtype
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dt))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dt))
+        else:
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * s.scale).astype(dt))
+    return treedef.unflatten(out)
+
+
+def abstract_params(specs, dtype) -> Any:
+    """ShapeDtypeStruct tree — dry-run lowering without any allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype),
+        specs,
+        is_leaf=_is_pspec,
+    )
+
+
+def logical_axes_tree(specs) -> Any:
+    """Matching tree of logical-axis tuples for parallel/sharding.py."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_pspec)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Threading (mesh, rules) through model code; None mesh = no constraints."""
+
+    mesh: Any = None
+    rules: Any = None
+
+    def c(self, x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        from repro.parallel.sharding import DEFAULT_RULES, named_sharding
+
+        rules = self.rules or DEFAULT_RULES
+        return jax.lax.with_sharding_constraint(
+            x, named_sharding(tuple(axes), self.mesh, rules, shape=x.shape)
+        )
+
+
+NO_SHARD = ShardCtx()
+
+
+def padded_vocab(cfg) -> int:
+    """Embedding/lm_head row count, padded so the vocab dim divides the TP
+    axis (cfg.vocab_pad_multiple; 0 = exact).  Published vocabs like 49155
+    (granite) otherwise force the unembed GEMM + logits to REPLICATE over
+    'model' — the probe showed that costs ~16x the sharded unembed
+    (EXPERIMENTS.md §Perf).  Padded logits are masked out of loss/argmax."""
+    m = getattr(cfg, "vocab_pad_multiple", 0)
+    if not m:
+        return cfg.vocab_size
+    return ((cfg.vocab_size + m - 1) // m) * m
+
+
+def gemm(x: jax.Array, w: jax.Array, cfg) -> jax.Array:
+    """Config-routed GEMM: XLA dot under pjit, Pallas mesh kernel if selected."""
+    backend = "pallas_mesh" if getattr(cfg, "use_mesh_kernel", False) else "xla"
+    return _matmul(x, w, backend=backend, out_dtype=x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, cfg, b: Optional[jax.Array] = None) -> jax.Array:
+    y = gemm(x, w, cfg)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma.astype(x.dtype)
+
+
+class RotaryTable:
+    """Precomputed RoPE angle table; `gather(pos)` works for any position array."""
+
+    def __init__(self, head_dim: int, theta: float, max_len: int):
+        self.head_dim = head_dim
+        inv = 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+        self.inv_freq = jnp.asarray(inv, jnp.float32)
+        self.max_len = max_len
+
+    def angles(self, positions: jax.Array) -> jax.Array:
+        # positions: (...,) int -> (..., head_dim/2) f32 angles
+        return positions[..., None].astype(jnp.float32) * self.inv_freq
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, hd); positions: (B, T) or (T,).  Rotate pairs (even, odd)."""
+    hd = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, T, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape)
+
+
+def softmax_xent(
+    logits: jax.Array, labels: jax.Array, *, z_loss: float = 0.0
+) -> Tuple[jax.Array, jax.Array]:
+    """Stable mean token cross-entropy (+optional z-loss).  Returns (loss, acc)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    loss = jnp.mean(nll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse**2)
+    acc = jnp.mean((jnp.argmax(lf, axis=-1) == labels).astype(jnp.float32))
+    return loss, acc

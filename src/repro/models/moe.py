@@ -1,0 +1,143 @@
+"""Mixture-of-Experts block: token-choice top-k routing, shared experts, EP.
+
+Switch/Mesh-TF *grouped* dense-dispatch: tokens are reshaped to
+(groups, group_size) with groups aligned to the data-sharded batch dim, and
+每 group dispatches into per-expert capacity buffers via one-hot einsums.
+Capacity scales with group_size (cap = cf * s * k / e), so the dispatch
+tensor is (G, s, e, cap) with G sharded over ('pod','data') and e over
+'model' — bounded per-device memory at any scale (DESIGN.md §4).  Small
+groups (s <= 256: decode steps, smoke tests) use cap = s, i.e. exact
+drop-free routing.
+
+EP mapping: the expert dim maps to 'model' when divisible (OLMoE 64 % 16 == 0)
+else the expert hidden dim is TP-sharded (Qwen2-MoE: 60 experts).
+
+Aux: Switch load-balance loss + router z-loss, returned for the train loop.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PSpec, ShardCtx, gemm
+
+__all__ = ["moe_specs", "moe_block", "swiglu_specs", "swiglu"]
+
+_GROUP_SIZE = 1024  # tokens per dispatch group at scale
+_EXACT_GROUP = 256  # groups this small route exactly (no capacity drops)
+
+
+def swiglu_specs(cfg, d_ff: int) -> Dict[str, PSpec]:
+    d = cfg.d_model
+    out_scale = 0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5)
+    return {
+        "wi": PSpec((d, 2 * d_ff), ("embed", "mlp"), 0.02),  # fused gate+up
+        "wo": PSpec((d_ff, d), ("mlp", "embed"), out_scale),
+    }
+
+
+def swiglu(p: Dict[str, jax.Array], x: jax.Array, cfg, ctx: ShardCtx) -> jax.Array:
+    gate_up = gemm(x, p["wi"], cfg)
+    gate_up = ctx.c(gate_up, ("batch", "seq", "mlp"))
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    y = gemm(h, p["wo"], cfg)
+    return ctx.c(y, ("batch", "seq", "embed"))
+
+
+def moe_specs(cfg) -> Dict[str, PSpec]:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    # EP when experts divide the TP axis; else shard the expert hidden dim.
+    ep_divisible = e % 16 == 0  # production 'model' axis size (DESIGN.md §4)
+    eax = "experts" if ep_divisible else None
+    fax = None if ep_divisible else "mlp"
+    out_scale = 0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5)
+    specs = {
+        "router": PSpec((d, e), ("embed", None), 0.02, dtype=jnp.float32),
+        "wi": PSpec((e, d, 2 * f), (eax, "embed", fax), 0.02),
+        "wo": PSpec((e, f, d), (eax, fax, "embed"), out_scale),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.moe_d_ff * cfg.num_shared_experts
+        specs["shared_wi"] = PSpec((d, 2 * fs), ("embed", "mlp"), 0.02)
+        specs["shared_wo"] = PSpec((fs, d), ("mlp", "embed"), out_scale)
+        specs["shared_gate"] = PSpec((d, 1), ("embed", None), 0.02)
+    return specs
+
+
+def moe_block(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # (B, T, D)
+    cfg,
+    ctx: ShardCtx,
+    *,
+    capacity_factor: float = 1.25,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (output, aux) with aux = {'lb_loss', 'router_z'}."""
+    b, t, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    n = b * t
+
+    # Group tokens along the (batch-sharded) leading dims: (G, s, d).
+    s = min(_GROUP_SIZE, t) if t > 1 else min(_GROUP_SIZE, n)
+    while n % s:
+        s //= 2
+    g = n // s
+    cap = s if s <= _EXACT_GROUP else max(1, int(capacity_factor * s * k / e))
+
+    xg = x.reshape(g, s, d)
+    xg = ctx.c(xg, ("batch", None, "embed"))
+    logits = jnp.einsum(
+        "gsd,de->gse", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    topv, topi = jax.lax.top_k(probs, k)  # (g, s, k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+    # Position of each (token, choice) in its expert's buffer, within-group.
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)  # (g, s, k, e)
+    flat = onehot.reshape(g, s * k, e)
+    pos = (jnp.cumsum(flat, axis=1) - 1.0).reshape(g, s, k, e)
+    pos = jnp.sum(pos * onehot, axis=-1)  # (g, s, k)
+    keep = pos < cap
+    gate = topv * keep.astype(topv.dtype)
+
+    # (g, s, e, cap) dispatch tensor: token -> (expert, slot).
+    cap_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=xg.dtype)  # (g, s, k, cap)
+    onehot_keep = onehot.astype(xg.dtype) * keep[..., None].astype(xg.dtype)
+    disp = jnp.einsum("gske,gskc->gsec", onehot_keep, cap_oh)
+    ex_in = jnp.einsum("gsec,gsd->gecd", disp, xg)  # (g, e, cap, d)
+    ex_in = ctx.c(ex_in, ("batch", "experts", None, "embed"))
+
+    gate_up = jnp.einsum("gecd,edf->gecf", ex_in, p["wi"])
+    gate_h, up_h = jnp.split(gate_up, 2, axis=-1)
+    h = jax.nn.silu(gate_h) * up_h
+    ex_out = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    ex_out = ctx.c(ex_out, ("batch", "experts", None, "embed"))
+
+    combine = jnp.einsum(
+        "gske,gskc->gsec", onehot_keep * gate.astype(xg.dtype)[..., None], cap_oh
+    )
+    y = jnp.einsum("gsec,gecd->gsd", combine, ex_out).reshape(b, t, d)
+
+    if cfg.num_shared_experts:
+        xf = x.reshape(n, d)
+        sg = jax.nn.sigmoid(
+            jnp.einsum("nd,do->no", xf.astype(jnp.float32), p["shared_gate"].astype(jnp.float32))
+        ).astype(x.dtype)
+        gu = gemm(xf, p["shared_wi"], cfg)
+        g_, u_ = jnp.split(gu, 2, axis=-1)
+        shared = gemm(jax.nn.silu(g_) * u_, p["shared_wo"], cfg)
+        y = y + (shared * sg).reshape(b, t, d)
+
+    # Switch load-balance + router z-loss (means over all groups/tokens).
+    load = jnp.mean(onehot.sum(2), axis=(0, 1))  # fraction routed per expert
+    imp = jnp.mean(probs, axis=(0, 1))
+    lb_loss = e * jnp.sum(load * imp) / k
+    router_z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    aux = {"lb_loss": lb_loss, "router_z": router_z}
+    return ctx.c(y, ("batch", "seq", "embed")), aux

@@ -1,0 +1,293 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent decay.
+
+Per layer: time-mix (WKV linear recurrence with per-channel data-dependent
+decay w_t, bonus u, data-dependent token-shift interpolation via a shared
+LoRA) + channel-mix.  The WKV state is (H, K, V) per sequence — O(1) in
+sequence length, which is why rwkv6 runs the long_500k decode cell.
+
+The recurrence S_t = diag(w_t) S_{t-1} + k_t^T v_t is evaluated with
+`jax.lax.scan` over time (the faithful sequential form; the per-channel decay
+makes the chunked-parallel form numerically delicate — see DESIGN.md
+§Arch-applicability: the mesh-array technique applies to this model's GEMMs,
+not to the recurrence).
+
+Entry points mirror transformer.py: rwkv_specs / rwkv_forward / rwkv_prefill /
+rwkv_decode with stacked per-layer states {"wkv", "tm_shift", "cm_shift"}.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PSpec, ShardCtx, gemm, rmsnorm
+from repro.models.layers import padded_vocab
+from repro.models.transformer import embed_tokens, stack_specs, unembed
+
+__all__ = ["rwkv_specs", "rwkv_forward", "rwkv_prefill", "rwkv_decode", "rwkv_state_specs"]
+
+_LORA = 32  # ddlerp LoRA rank
+_DECAY_LORA = 64
+
+
+def _layer_specs(cfg) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    out_scale = 0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5)
+    return {
+        "ln1": PSpec((d,), ("embed",), init="ones"),
+        "ln2": PSpec((d,), ("embed",), init="ones"),
+        # time-mix
+        "mu_x": PSpec((d,), ("embed",), 0.5),
+        "mu_rkvwg": PSpec((5, d), (None, "embed"), 0.5),
+        "tm_w1": PSpec((d, 5 * _LORA), ("embed", None), 0.02),
+        "tm_w2": PSpec((5, _LORA, d), (None, None, "embed"), 0.02),
+        "w0": PSpec((d,), ("embed",), 0.5),
+        "ww1": PSpec((d, _DECAY_LORA), ("embed", None), 0.02),
+        "ww2": PSpec((_DECAY_LORA, d), (None, "embed"), 0.02),
+        "u": PSpec((d,), ("embed",), 0.5),
+        "wr": PSpec((d, d), ("embed", "heads"), 0.02),
+        "wk": PSpec((d, d), ("embed", "heads"), 0.02),
+        "wv": PSpec((d, d), ("embed", "heads"), 0.02),
+        "wg": PSpec((d, d), ("embed", "heads"), 0.02),
+        "wo": PSpec((d, d), ("heads", "embed"), out_scale),
+        "gn_g": PSpec((d,), ("embed",), init="ones"),
+        "gn_b": PSpec((d,), ("embed",), init="zeros"),
+        # channel-mix
+        "cm_mu_k": PSpec((d,), ("embed",), 0.5),
+        "cm_mu_r": PSpec((d,), ("embed",), 0.5),
+        "cm_wk": PSpec((d, f), ("embed", "mlp"), 0.02),
+        "cm_wv": PSpec((f, d), ("mlp", "embed"), out_scale),
+        "cm_wr": PSpec((d, d), ("embed", "embed"), 0.02),
+    }
+
+
+def rwkv_specs(cfg) -> Dict[str, Any]:
+    return {
+        "embed": PSpec((padded_vocab(cfg), cfg.d_model), ("vocab", "embed"), 0.02),
+        "blocks": stack_specs(_layer_specs(cfg), cfg.num_layers),
+        "final_norm": PSpec((cfg.d_model,), ("embed",), init="ones"),
+        "lm_head": PSpec((cfg.d_model, padded_vocab(cfg)), ("embed", "vocab"), 0.02),
+    }
+
+
+def rwkv_state_specs(cfg, batch: int):
+    """Abstract stacked per-layer recurrent state (ShapeDtypeStructs)."""
+    h, k = cfg.num_heads, cfg.head_dim_
+    L, d = cfg.num_layers, cfg.d_model
+    f32 = jnp.float32
+    return {
+        "wkv": jax.ShapeDtypeStruct((L, batch, h, k, k), f32),
+        "tm_shift": jax.ShapeDtypeStruct((L, batch, d), cfg.adtype),
+        "cm_shift": jax.ShapeDtypeStruct((L, batch, d), cfg.adtype),
+    }
+
+
+def _zero_state(cfg, batch: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), rwkv_state_specs(cfg, batch)
+    )
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift interpolation for (r, k, v, w, g)."""
+    base = x + (x_prev - x) * p["mu_x"].astype(x.dtype)
+    lora = jnp.einsum(
+        "btd,dr->btr", base, p["tm_w1"].astype(x.dtype)
+    ).reshape(*x.shape[:-1], 5, _LORA)
+    adj = jnp.einsum("btir,ird->btid", jnp.tanh(lora), p["tm_w2"].astype(x.dtype))
+    mus = p["mu_rkvwg"].astype(x.dtype) + adj  # (B, T, 5, D)
+    return [x + (x_prev - x) * mus[..., i, :] for i in range(5)]
+
+
+_WKV_CHUNK = 128
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk: int = 16, unroll: bool = False):
+    """Chunk-parallel (GEMM-form) WKV — exact, beyond-paper hillclimb.
+
+    The faithful per-token scan moves the full (B, H, K, V) state through HBM
+    twice per token; this form touches the state twice per CHUNK and turns
+    the per-token MACs into MXU matmuls (the TPU-native reading of the
+    paper's 'feed the systolic array without bubbles').
+
+    Derivation (per head, per channel c of K):
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T;   o_t = r_t (S_{t-1} + u k_t v_t^T)
+      With cumulative log-decay cw_t = sum_{i<=t} log w_i inside a chunk:
+        o_t = (r_t . e^{cw_{t-1}}) S_in                       [inter-chunk]
+            + sum_{j<t} [ sum_c r_tc k_jc e^{cw_{t-1,c}-cw_{j,c}} ] v_j
+            + (sum_c r_tc u_c k_tc) v_t                        [bonus diag]
+        S_out = diag(e^{cw_C}) S_in + sum_j (e^{cw_C - cw_j} . k_j) v_j^T
+      Every exponent is a difference of a *decreasing* sequence evaluated at
+      j <= t-1 (or masked to -inf first), hence <= 0 — no overflow for any
+      data-dependent decay.  r/k/v/w: (B, T, H, K) f32; u: (H, K);
+      s0: (B, H, K, V).  T must divide by `chunk`.
+    """
+    b, t, h, kdim = r.shape
+    vdim = s0.shape[-1]
+    c = chunk
+    nc = t // c
+    if nc * c != t:
+        raise ValueError(f"T={t} not divisible by wkv chunk={c}")
+
+    resh = lambda a: jnp.moveaxis(a.reshape(b, nc, c, h, kdim), 1, 0)
+    rc, kc, vc = resh(r), resh(k), resh(v)
+    lw = jnp.log(jnp.maximum(resh(w), 1e-38))  # (nc,B,C,H,K), <= 0
+    cw = jnp.cumsum(lw, axis=2)  # inclusive cumulative log decay
+    cw_prev = cw - lw  # exclusive (cw_{t-1}; row 0 = 0)
+
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)  # strict lower: j < t
+
+    @jax.checkpoint
+    def body(s, inp):
+        rj, kj, vj, cwj, cwp = inp  # (B,C,H,K) each
+        # intra-chunk attention matrix A[t,j] (strictly causal, decayed)
+        diff = cwp[:, :, None] - cwj[:, None, :]  # (B,C,C,H,K): t,j
+        diff = jnp.where(tri[None, :, :, None, None], diff, -1e30)
+        a_mat = jnp.einsum("bthk,bjhk,btjhk->bthj", rj, kj, jnp.exp(diff))
+        dg = jnp.einsum("bthk,hk,bthk->bth", rj, u, kj)  # bonus diagonal
+        o = jnp.einsum("bthj,bjhv->bthv", a_mat, vj) + dg[..., None] * vj
+        o = o + jnp.einsum("bthk,bhkv->bthv", rj * jnp.exp(cwp), s)
+        # chunk-final state
+        wj = jnp.exp(cwj[:, -1:, :, :] - cwj)  # e^{cw_C - cw_j} <= 1
+        s_new = s * jnp.exp(cwj[:, -1])[..., None] + jnp.einsum(
+            "bjhk,bjhv->bhkv", kj * wj, vj
+        )
+        return s_new, o
+
+    s_final, o = jax.lax.scan(body, s0, (rc, kc, vc, cw, cw_prev), unroll=unroll)
+    o = jnp.moveaxis(o, 0, 1).reshape(b, t, h, vdim)
+    return o, s_final
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """S_t = diag(w_t) S_{t-1} + k_t v_t^T;  o_t = r_t (S_{t-1} + u k_t v_t^T).
+
+    r/k/v/w: (B, T, H, K) f32; u: (H, K); s0: (B, H, K, V).
+    Returns (o (B, T, H, V), s_final).
+
+    The time loop is a two-level scan: chunks of _WKV_CHUNK steps with the
+    inner scan wrapped in jax.checkpoint, so AD saves one (B, H, K, V) state
+    per *chunk* instead of per step (T/128x less remat-carrier memory —
+    essential for train_4k; a flat scan would save 4096 carried states).
+    """
+    b, t, h, kdim = r.shape
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B, H, K) each
+        kv = kt[..., None] * vt[..., None, :]  # (B, H, K, V)
+        s_eff = s + u[None, :, :, None] * kv
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s_eff)
+        s = wt[..., None] * s + kv
+        return s, o
+
+    @jax.checkpoint
+    def chunk_body(s, chunk_xs):
+        return jax.lax.scan(step, s, chunk_xs)
+
+    if t % _WKV_CHUNK == 0 and t > _WKV_CHUNK:
+        nc, c = t // _WKV_CHUNK, _WKV_CHUNK
+        xs = jax.tree.map(
+            lambda a: jnp.moveaxis(a, 1, 0).reshape(nc, c, b, h, kdim), (r, k, v, w)
+        )
+        s_final, o = jax.lax.scan(chunk_body, s0, xs)
+        o = o.reshape(t, b, h, kdim)
+    else:
+        xs = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), (r, k, v, w))
+        s_final, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1), s_final
+
+
+def _time_mix(p, x, cfg, ctx, state_wkv, x_last):
+    """x: (B, T, D); x_last: (B, D) previous-token carry.  Returns (y, wkv', last')."""
+    b, t, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim_
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+
+    r = gemm(xr, p["wr"].astype(x.dtype), cfg).reshape(b, t, h, hd).astype(jnp.float32)
+    k = gemm(xk, p["wk"].astype(x.dtype), cfg).reshape(b, t, h, hd).astype(jnp.float32)
+    v = gemm(xv, p["wv"].astype(x.dtype), cfg).reshape(b, t, h, hd).astype(jnp.float32)
+    g = jax.nn.silu(gemm(xg, p["wg"].astype(x.dtype), cfg))
+
+    # data-dependent decay w_t in (0, 1): exp(-exp(w0 + lora(xw)))
+    dec = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "btr,rd->btd",
+        jnp.tanh(jnp.einsum("btd,dr->btr", xw.astype(jnp.float32), p["ww1"].astype(jnp.float32))),
+        p["ww2"].astype(jnp.float32),
+    )
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, t, h, hd)
+    u = p["u"].astype(jnp.float32).reshape(h, hd)
+
+    if getattr(cfg, "wkv_chunked", False) and t > 1 and t % cfg.wkv_chunk == 0:
+        # NOTE: the chunk scan stays a while loop even under cost-probe
+        # lowering (unrolling nc=T/chunk bodies explodes compile time); its
+        # traffic is accounted analytically — dryrun.recurrence_traffic_analytic.
+        o, s_final = _wkv_chunked(r, k, v, w, u, state_wkv, chunk=cfg.wkv_chunk)
+    else:
+        o, s_final = _wkv_scan(r, k, v, w, u, state_wkv)
+    o = o.reshape(b, t, d).astype(x.dtype)
+    # per-head group norm
+    og = o.reshape(b, t, h, hd).astype(jnp.float32)
+    mean = og.mean(-1, keepdims=True)
+    var = og.var(-1, keepdims=True)
+    og = ((og - mean) * jax.lax.rsqrt(var + 64e-5)).reshape(b, t, d).astype(x.dtype)
+    o = og * p["gn_g"].astype(x.dtype) + p["gn_b"].astype(x.dtype)
+    y = gemm(o * g, p["wo"].astype(x.dtype), cfg)
+    return ctx.c(y, ("batch", "seq", "embed")), s_final, x[:, -1, :]
+
+
+def _channel_mix(p, x, cfg, ctx, x_last):
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    xk = x + (x_prev - x) * p["cm_mu_k"].astype(x.dtype)
+    xr = x + (x_prev - x) * p["cm_mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(gemm(xk, p["cm_wk"].astype(x.dtype), cfg)))
+    kk = ctx.c(kk, ("batch", "seq", "mlp"))
+    vv = gemm(kk, p["cm_wv"].astype(x.dtype), cfg)
+    rr = jax.nn.sigmoid(gemm(xr, p["cm_wr"].astype(x.dtype), cfg))
+    return ctx.c(rr * vv, ("batch", "seq", "embed")), x[:, -1, :]
+
+
+def _block(p, x, cfg, ctx, st):
+    y, wkv, tm_last = _time_mix(p, rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, ctx, st["wkv"], st["tm_shift"])
+    x = x + y
+    y2, cm_last = _channel_mix(p, rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, ctx, st["cm_shift"])
+    x = x + y2
+    return x, {"wkv": wkv, "tm_shift": tm_last, "cm_shift": cm_last}
+
+
+def _run(params, tokens, cfg, ctx, state):
+    x = embed_tokens(params, tokens, cfg, ctx)
+
+    def body(x, layer_in):
+        lp, st = layer_in
+        # Note: time-mix normalizes the shift carry with this layer's ln1, so
+        # the carry stores the *pre-norm* activation; we keep the normalized
+        # variant for exactness between forward and decode.
+        xin = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        y, wkv, tm_last = _time_mix(lp, xin, cfg, ctx, st["wkv"], st["tm_shift"])
+        x = x + y
+        xin2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        y2, cm_last = _channel_mix(lp, xin2, cfg, ctx, st["cm_shift"])
+        x = ctx.c(x + y2, ("batch", "seq_sp", "embed"))  # SP remat carrier
+        return x, {"wkv": wkv, "tm_shift": tm_last, "cm_shift": cm_last}
+
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], state), unroll=cfg.scan_unroll)
+    logits = unembed(params, x, cfg, ctx)
+    return logits, new_state
+
+
+def rwkv_forward(params, tokens, cfg, ctx: ShardCtx = ShardCtx()):
+    logits, _ = _run(params, tokens, cfg, ctx, _zero_state(cfg, tokens.shape[0]))
+    return logits, {}
+
+
+def rwkv_prefill(params, tokens, cfg, ctx: ShardCtx = ShardCtx()):
+    return _run(params, tokens, cfg, ctx, _zero_state(cfg, tokens.shape[0]))
+
+
+def rwkv_decode(params, tokens, state, pos, cfg, ctx: ShardCtx = ShardCtx()):
+    """pos unused (state is position-free) — kept for API parity."""
+    del pos
+    return _run(params, tokens, cfg, ctx, state)

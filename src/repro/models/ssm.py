@@ -1,0 +1,345 @@
+"""Mamba2 (SSD) layers + the Zamba2 hybrid (arXiv:2411.15242).
+
+Mamba2's scalar-per-head decay makes the *chunked* SSD form numerically safe
+(all exponents are differences of a monotone cumulative log-decay, hence
+<= 0), so training uses matmul-rich chunked evaluation (`ssd_chunked`) and
+decode carries the (H, P, N) state with an O(1) step (`ssd_step`).  The
+sequential `ssd_scan` is kept as the oracle for property tests.
+
+Zamba2 structure: `num_layers` Mamba2 blocks with one *shared-weight*
+transformer block (attention + SwiGLU) applied after every
+`shared_attn_period` Mamba layers — n_seg applications, each with its own KV
+cache: params {"mamba_seg": (n_seg, period, ...), "mamba_tail": (tail, ...),
+"shared": single block}; caches stacked (n_seg, B, T, KV, hd).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention, attn_specs
+from repro.models.layers import PSpec, ShardCtx, gemm, rmsnorm
+from repro.models.moe import swiglu, swiglu_specs
+from repro.models.layers import padded_vocab
+from repro.models.transformer import embed_tokens, stack_specs, unembed
+
+__all__ = [
+    "zamba_specs",
+    "zamba_forward",
+    "zamba_prefill",
+    "zamba_decode",
+    "zamba_state_specs",
+    "ssd_chunked",
+    "ssd_scan",
+    "ssd_step",
+]
+
+_CHUNK = 128
+_CONV_K = 4
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(x, dt, a_log, b, c, d_skip, h0):
+    """Sequential oracle.  x: (B,T,H,P); dt: (B,T,H); a_log: (H,);
+    b, c: (B,T,N); d_skip: (H,); h0: (B,H,P,N).  Returns (y, h_final)."""
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        a = jnp.exp(-jnp.exp(a_log) * dtt)  # (B, H)
+        h = h * a[..., None, None] + (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, ct) + d_skip[None, :, None] * xt
+        return h, y
+
+    xs = jax.tree.map(lambda t: jnp.moveaxis(t, 1, 0), (x, dt, b, c))
+    h, y = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(y, 0, 1), h
+
+
+def ssd_step(h, x, dt, a_log, b, c, d_skip):
+    """One decode step.  x: (B,H,P); dt: (B,H); b, c: (B,N)."""
+    a = jnp.exp(-jnp.exp(a_log) * dt)
+    h = h * a[..., None, None] + (dt[..., None] * x)[..., None] * b[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, c) + d_skip[None, :, None] * x
+    return y, h
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, h0, chunk: int = _CHUNK):
+    """Chunk-parallel SSD (matmul form).  Same signature as ssd_scan."""
+    B, T, H, P = x.shape
+    N = b.shape[-1]
+    nc = -(-T // chunk)
+    pad = nc * chunk - T
+    if pad:
+        padt = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, b, c = padt(x), padt(dt), padt(b), padt(c)
+    C = chunk
+    xc = x.reshape(B, nc, C, H, P)
+    dtc = dt.reshape(B, nc, C, H)
+    bc = b.reshape(B, nc, C, N)
+    cc = c.reshape(B, nc, C, N)
+
+    la = jnp.cumsum(-jnp.exp(a_log)[None, None, None] * dtc, axis=2)  # (B,nc,C,H) <=0, decreasing
+    # Intra-chunk: y[t] += sum_{j<=t} exp(la_t - la_j) dt_j (C_t.B_j) x_j
+    diff = la[:, :, :, None, :] - la[:, :, None, :, :]  # (B,nc,C,C,H): t,j
+    mask = jnp.tril(jnp.ones((C, C), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    G = jnp.einsum("bktn,bkjn->bktj", cc, bc)  # (B,nc,C,C)
+    M = G[..., None] * L * dtc[:, :, None, :, :]  # weight for (t, j, h)
+    y = jnp.einsum("bktjh,bkjhp->bkthp", M, xc)
+    # Inter-chunk: y[t] += exp(la_t) C_t . h_in ; carry h across chunks.
+    decay_in = jnp.exp(la)  # (B,nc,C,H)
+    a_prod = jnp.exp(la[:, :, -1, :])  # (B,nc,H)
+    # per-chunk state contribution: sum_j exp(la_C - la_j) dt_j (x_j (x) B_j)
+    wj = jnp.exp(la[:, :, -1:, :] - la) * dtc  # (B,nc,C,H)
+    h_chunk = jnp.einsum("bkjh,bkjhp,bkjn->bkhpn", wj, xc, bc)
+
+    def carry(h, inp):
+        hc, ap = inp  # (B,H,P,N), (B,H)
+        h_out = h * ap[..., None, None] + hc
+        return h_out, h  # emit h_in for this chunk
+
+    h_final, h_ins = jax.lax.scan(
+        carry,
+        h0,
+        (jnp.moveaxis(h_chunk, 1, 0), jnp.moveaxis(a_prod, 1, 0)),
+    )
+    h_ins = jnp.moveaxis(h_ins, 0, 1)  # (B,nc,H,P,N)
+    y = y + jnp.einsum("bkth,bktn,bkhpn->bkthp", decay_in, cc, h_ins)
+    y = y.reshape(B, nc * C, H, P)[:, :T]
+    y = y + d_skip[None, None, :, None] * x[:, :T].reshape(B, T, H, P)
+    return y, h_final
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _mamba_specs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state_size
+    h = cfg.ssm_num_heads
+    conv_dim = d_in + 2 * n
+    out_scale = 0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5)
+    return {
+        "ln": PSpec((d,), ("embed",), init="ones"),
+        "in_proj": PSpec((d, 2 * d_in + 2 * n + h), ("embed", "mlp"), 0.02),
+        "conv_w": PSpec((_CONV_K, conv_dim), (None, "mlp"), 0.2),
+        "conv_b": PSpec((conv_dim,), ("mlp",), init="zeros"),
+        "a_log": PSpec((h,), (None,), 0.5),
+        "dt_bias": PSpec((h,), (None,), 0.5),
+        "d_skip": PSpec((h,), (None,), init="ones"),
+        "out_norm": PSpec((d_in,), ("mlp",), init="ones"),
+        "out_proj": PSpec((d_in, d), ("mlp", "embed"), out_scale),
+    }
+
+
+def _split_proj(cfg, z_xbc_dt):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state_size
+    h = cfg.ssm_num_heads
+    return jnp.split(z_xbc_dt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+
+
+def _causal_conv(xbc, w, bias, conv_state=None):
+    """Depthwise causal conv (K=4) via shifted adds.  xbc: (B, T, Cd).
+
+    conv_state: (B, K-1, Cd) previous inputs (decode);  returns (y, new_state).
+    """
+    b, t, cd = xbc.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((b, _CONV_K - 1, cd), xbc.dtype)
+    full = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)  # (B, T+3, Cd)
+    y = sum(
+        full[:, i : i + t, :] * w[i][None, None, :].astype(xbc.dtype)
+        for i in range(_CONV_K)
+    )
+    y = jax.nn.silu(y + bias[None, None].astype(xbc.dtype))
+    return y, full[:, -( _CONV_K - 1):, :]
+
+
+def _mamba_block(p, x, cfg, ctx, state, *, chunked: bool):
+    """state = {"h": (B,H,P,N), "conv": (B,3,Cd)}; returns (y, new_state)."""
+    b, t, d = x.shape
+    d_in = cfg.ssm_expand * d
+    n, h = cfg.ssm_state_size, cfg.ssm_num_heads
+    p_dim = d_in // h
+
+    zxbcdt = gemm(x, p["in_proj"].astype(x.dtype), cfg)
+    zxbcdt = ctx.c(zxbcdt, ("batch", "seq", "mlp"))
+    z, xin, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], state["conv"])
+    xin, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+
+    xh = xin.reshape(b, t, h, p_dim).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    bf, cf = bmat.astype(jnp.float32), cmat.astype(jnp.float32)
+    a_log, d_skip = p["a_log"].astype(jnp.float32), p["d_skip"].astype(jnp.float32)
+
+    if t == 1:
+        y, h_new = ssd_step(
+            state["h"], xh[:, 0], dtv[:, 0], a_log, bf[:, 0], cf[:, 0], d_skip
+        )
+        y = y[:, None]
+    elif chunked:
+        y, h_new = ssd_chunked(xh, dtv, a_log, bf, cf, d_skip, state["h"])
+    else:
+        y, h_new = ssd_scan(xh, dtv, a_log, bf, cf, d_skip, state["h"])
+
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = gemm(y, p["out_proj"].astype(x.dtype), cfg)
+    return ctx.c(out, ("batch", "seq", "embed")), {"h": h_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid model
+# ---------------------------------------------------------------------------
+
+
+def _segments(cfg) -> Tuple[int, int, int]:
+    period = cfg.shared_attn_period
+    n_seg = cfg.num_layers // period
+    tail = cfg.num_layers - n_seg * period
+    return n_seg, period, tail
+
+
+def zamba_specs(cfg) -> Dict[str, Any]:
+    n_seg, period, tail = _segments(cfg)
+    one = _mamba_specs(cfg)
+    specs: Dict[str, Any] = {
+        "embed": PSpec((padded_vocab(cfg), cfg.d_model), ("vocab", "embed"), 0.02),
+        "mamba_seg": stack_specs(stack_specs(one, period), n_seg),
+        "shared": {
+            "ln1": PSpec((cfg.d_model,), ("embed",), init="ones"),
+            "ln2": PSpec((cfg.d_model,), ("embed",), init="ones"),
+            "attn": attn_specs(cfg),
+            "mlp": swiglu_specs(cfg, cfg.d_ff),
+        },
+        "final_norm": PSpec((cfg.d_model,), ("embed",), init="ones"),
+        "lm_head": PSpec((cfg.d_model, padded_vocab(cfg)), ("embed", "vocab"), 0.02),
+    }
+    if tail:
+        specs["mamba_tail"] = stack_specs(one, tail)
+    return specs
+
+
+def zamba_state_specs(cfg, batch: int, max_len: int):
+    """Abstract decode state: per-layer SSM + conv states, per-app KV caches."""
+    n_seg, period, tail = _segments(cfg)
+    d_in = cfg.ssm_expand * cfg.d_model
+    n, h = cfg.ssm_state_size, cfg.ssm_num_heads
+    cd = d_in + 2 * n
+    kv, hd = cfg.num_kv_heads, cfg.head_dim_
+    L = cfg.num_layers
+    return {
+        "h": jax.ShapeDtypeStruct((L, batch, h, d_in // h, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((L, batch, _CONV_K - 1, cd), cfg.adtype),
+        "kv_k": jax.ShapeDtypeStruct((n_seg, batch, max_len, kv, hd), cfg.adtype),
+        "kv_v": jax.ShapeDtypeStruct((n_seg, batch, max_len, kv, hd), cfg.adtype),
+    }
+
+
+def _zero_state(cfg, batch: int, max_len: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), zamba_state_specs(cfg, batch, max_len)
+    )
+
+
+def _shared_block(p, x, cfg, ctx, kv=None, cache_pos=None, write_cache=False):
+    h, new_cache = attention(
+        p["attn"],
+        rmsnorm(x, p["ln1"], cfg.norm_eps),
+        cfg,
+        ctx,
+        cache=kv,
+        cache_pos=cache_pos,
+        write_cache=write_cache,
+    )
+    x = x + h
+    x = x + swiglu(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, ctx)
+    return x, new_cache
+
+
+def _run(params, tokens, cfg, ctx, state, *, mode: str, pos=None, chunked=True):
+    """mode: 'forward' (no cache IO) | 'prefill' | 'decode'."""
+    n_seg, period, tail = _segments(cfg)
+    x = embed_tokens(params, tokens, cfg, ctx)
+    L = cfg.num_layers
+
+    def mamba_scan(x, stacked, st_slice):
+        def body(x, layer_in):
+            lp, st = layer_in
+            y, new_st = _mamba_block(lp, x, cfg, ctx, st, chunked=chunked)
+            return ctx.c(x + y, ("batch", "seq_sp", "embed")), new_st
+
+        return jax.lax.scan(body, x, (stacked, st_slice), unroll=cfg.scan_unroll)
+
+    new_h, new_conv = [], []
+    new_k, new_v = [], []
+    for seg in range(n_seg):
+        seg_params = jax.tree.map(lambda t: t[seg], params["mamba_seg"])
+        lo = seg * period
+        st = {
+            "h": state["h"][lo : lo + period],
+            "conv": state["conv"][lo : lo + period],
+        }
+        x, st_new = mamba_scan(x, seg_params, st)
+        new_h.append(st_new["h"])
+        new_conv.append(st_new["conv"])
+        if mode == "forward":
+            x, _ = _shared_block(params["shared"], x, cfg, ctx)
+        elif mode == "prefill":
+            x, kvc = _shared_block(params["shared"], x, cfg, ctx, write_cache=True)
+            new_k.append(kvc["k"])
+            new_v.append(kvc["v"])
+        else:  # decode
+            kv = {"k": state["kv_k"][seg], "v": state["kv_v"][seg]}
+            x, kvc = _shared_block(
+                params["shared"], x, cfg, ctx, kv=kv, cache_pos=pos
+            )
+            new_k.append(kvc["k"])
+            new_v.append(kvc["v"])
+    if tail:
+        st = {"h": state["h"][L - tail :], "conv": state["conv"][L - tail :]}
+        x, st_new = mamba_scan(x, params["mamba_tail"], st)
+        new_h.append(st_new["h"])
+        new_conv.append(st_new["conv"])
+
+    logits = unembed(params, x, cfg, ctx)
+    new_state = {
+        "h": jnp.concatenate(new_h, axis=0),
+        "conv": jnp.concatenate(new_conv, axis=0),
+    }
+    if mode != "forward":
+        new_state["kv_k"] = jnp.stack(new_k)
+        new_state["kv_v"] = jnp.stack(new_v)
+    return logits, new_state
+
+
+def zamba_forward(params, tokens, cfg, ctx: ShardCtx = ShardCtx(), *, chunked=True):
+    logits, _ = _run(
+        params, tokens, cfg, ctx,
+        _zero_state(cfg, tokens.shape[0], 1), mode="forward", chunked=chunked,
+    )
+    return logits, {}
+
+
+def zamba_prefill(params, tokens, cfg, ctx: ShardCtx = ShardCtx(), *, chunked=True):
+    return _run(
+        params, tokens, cfg, ctx,
+        _zero_state(cfg, tokens.shape[0], 1), mode="prefill", chunked=chunked,
+    )
+
+
+def zamba_decode(params, tokens, state, pos, cfg, ctx: ShardCtx = ShardCtx()):
+    return _run(params, tokens, cfg, ctx, state, mode="decode", pos=pos)

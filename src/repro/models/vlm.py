@@ -1,0 +1,94 @@
+"""Pixtral-12B backbone: mistral-nemo-style decoder with stub ViT frontend.
+
+Per the assignment the modality frontend is a STUB: `input_specs()` supplies
+precomputed patch embeddings (B, P, D) which are projected and prepended to
+the text-token embeddings.  Labels/logits cover the text positions; decode
+carries a KV cache over (patches + text) positions.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PSpec, ShardCtx, gemm
+from repro.models.transformer import (
+    block_apply,
+    block_specs,
+    embed_tokens,
+    lm_specs,
+    stack_specs,
+    unembed,
+)
+
+__all__ = ["vlm_specs", "vlm_forward", "vlm_prefill", "vlm_decode", "vlm_cache_specs"]
+
+
+def vlm_specs(cfg) -> Dict[str, Any]:
+    specs = lm_specs(cfg)
+    specs["patch_proj"] = PSpec((cfg.d_model, cfg.d_model), ("embed", "embed"), 0.02)
+    return specs
+
+
+def _embed_multimodal(params, batch, cfg, ctx):
+    """concat(project(patch_embeds), embed(tokens)) -> (B, P+T, D)."""
+    patches = gemm(
+        batch["patches"].astype(cfg.adtype), params["patch_proj"].astype(cfg.adtype), cfg
+    )
+    patches = ctx.c(patches, ("batch", "patches", "embed"))
+    text = embed_tokens(params, batch["tokens"], cfg, ctx)
+    return jnp.concatenate([patches, text], axis=1)
+
+
+def vlm_forward(params, batch: Dict[str, jax.Array], cfg, ctx: ShardCtx = ShardCtx()):
+    """batch: {"patches": (B, P, D), "tokens": (B, T)} -> (text logits, aux).
+
+    Causal over the concatenated stream; returns logits for text positions.
+    """
+    x = _embed_multimodal(params, batch, cfg, ctx)
+
+    def body(x, lp):
+        y, _, _ = block_apply(lp, x, cfg, ctx)
+        return ctx.c(y, ("batch", "seq_sp", "embed")), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+    n_patches = batch["patches"].shape[1]
+    logits = unembed(params, x[:, n_patches:], cfg, ctx)
+    return logits, {}
+
+
+def vlm_prefill(params, batch, cfg, ctx: ShardCtx = ShardCtx()):
+    x = _embed_multimodal(params, batch, cfg, ctx)
+
+    def body(x, lp):
+        y, cache, _ = block_apply(lp, x, cfg, ctx, write_cache=True)
+        return ctx.c(y, ("batch", "seq_sp", "embed")), cache
+
+    x, caches = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+    n_patches = batch["patches"].shape[1]
+    logits = unembed(params, x[:, n_patches:], cfg, ctx)
+    return logits, caches
+
+
+def vlm_decode(params, tokens, caches, pos, cfg, ctx: ShardCtx = ShardCtx()):
+    """pos counts from the start of the (patches + text) stream."""
+    x = embed_tokens(params, tokens, cfg, ctx)
+
+    def body(x, layer_in):
+        lp, cache = layer_in
+        y, new_cache, _ = block_apply(lp, x, cfg, ctx, cache=cache, cache_pos=pos)
+        return y, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches), unroll=cfg.scan_unroll)
+    logits = unembed(params, x, cfg, ctx)
+    return logits, new_caches
+
+
+def vlm_cache_specs(cfg, batch: int, max_len: int):
+    kv, hd = cfg.num_kv_heads, cfg.head_dim_
+    return {
+        "k": jax.ShapeDtypeStruct((cfg.num_layers, batch, max_len, kv, hd), cfg.adtype),
+        "v": jax.ShapeDtypeStruct((cfg.num_layers, batch, max_len, kv, hd), cfg.adtype),
+    }

@@ -1,0 +1,164 @@
+"""Whisper-medium backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+Per the assignment, the conv/mel frontend is a STUB: `input_specs()` supplies
+precomputed frame embeddings (B, T_enc, D) directly to the encoder.
+Assigned-shape convention (DESIGN.md §6): encoder length = shape seq_len,
+decoder length = seq_len // cfg.dec_ratio.
+
+Encoder: bidirectional self-attention blocks (no cache).
+Decoder: causal self-attention (+KV cache) and cross-attention over the
+encoder output; cross K/V are computed once at prefill and carried in the
+decode state.  RoPE is used for positions in both stacks (framework-level
+adaptation of Whisper's learned absolute embeddings — noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention, attn_specs
+from repro.models.layers import PSpec, ShardCtx, dense, gemm, padded_vocab, rmsnorm
+from repro.models.moe import swiglu, swiglu_specs
+from repro.models.transformer import stack_specs, unembed
+
+__all__ = [
+    "whisper_specs",
+    "whisper_forward",
+    "whisper_prefill",
+    "whisper_decode",
+    "whisper_cache_specs",
+]
+
+
+def _enc_block_specs(cfg):
+    return {
+        "ln1": PSpec((cfg.d_model,), ("embed",), init="ones"),
+        "ln2": PSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn_specs(cfg),
+        "mlp": swiglu_specs(cfg, cfg.d_ff),
+    }
+
+
+def _dec_block_specs(cfg):
+    return {
+        "ln1": PSpec((cfg.d_model,), ("embed",), init="ones"),
+        "ln_x": PSpec((cfg.d_model,), ("embed",), init="ones"),
+        "ln2": PSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn_specs(cfg),
+        "xattn": attn_specs(cfg),
+        "mlp": swiglu_specs(cfg, cfg.d_ff),
+    }
+
+
+def whisper_specs(cfg) -> Dict[str, Any]:
+    return {
+        # frontend stub: a single projection applied to precomputed frames
+        "frame_proj": PSpec((cfg.d_model, cfg.d_model), ("embed", "embed"), 0.02),
+        "enc_blocks": stack_specs(_enc_block_specs(cfg), cfg.enc_layers),
+        "enc_norm": PSpec((cfg.d_model,), ("embed",), init="ones"),
+        "embed": PSpec((padded_vocab(cfg), cfg.d_model), ("vocab", "embed"), 0.02),
+        "dec_blocks": stack_specs(_dec_block_specs(cfg), cfg.dec_layers),
+        "final_norm": PSpec((cfg.d_model,), ("embed",), init="ones"),
+        "lm_head": PSpec((cfg.d_model, padded_vocab(cfg)), ("embed", "vocab"), 0.02),
+    }
+
+
+def _encode(params, frames, cfg, ctx):
+    """frames: (B, T_enc, D) precomputed embeddings (stub frontend)."""
+    x = gemm(frames.astype(cfg.adtype), params["frame_proj"].astype(cfg.adtype), cfg)
+    x = ctx.c(x, ("batch", "frames", "embed"))
+
+    def body(x, lp):
+        h, _ = attention(
+            lp["attn"], rmsnorm(x, lp["ln1"], cfg.norm_eps), cfg, ctx, causal=False
+        )
+        x = x + h
+        x = x + swiglu(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg, ctx)
+        return ctx.c(x, ("batch", "seq_sp", "embed")), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"], unroll=cfg.scan_unroll)
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp, enc_out, cfg):
+    """Precompute cross-attention K/V from encoder output for one layer."""
+    b, t, _ = enc_out.shape
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim_
+    k = dense(enc_out, lp["xattn"]["wk"], cfg, lp["xattn"].get("bk")).reshape(b, t, kvh, hd)
+    v = dense(enc_out, lp["xattn"]["wv"], cfg, lp["xattn"].get("bv")).reshape(b, t, kvh, hd)
+    return k, v
+
+
+def _decode_stack(params, tokens, enc_out, cfg, ctx, *, cache=None, pos=None, write_cache=False):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+    x = ctx.c(x, ("batch", "seq", "embed"))
+
+    def body(x, layer_in):
+        if cache is not None:
+            lp, kvc = layer_in
+        else:
+            lp, kvc = layer_in, None
+        h, new_kv = attention(
+            lp["attn"],
+            rmsnorm(x, lp["ln1"], cfg.norm_eps),
+            cfg,
+            ctx,
+            cache=kvc,
+            cache_pos=pos,
+            write_cache=write_cache,
+        )
+        x = x + h
+        xk, xv = _cross_kv(lp, enc_out, cfg)
+        h, _ = attention(
+            lp["xattn"],
+            rmsnorm(x, lp["ln_x"], cfg.norm_eps),
+            cfg,
+            ctx,
+            cross_kv=(xk, xv),
+        )
+        x = x + h
+        x = x + swiglu(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg, ctx)
+        return ctx.c(x, ("batch", "seq_sp", "embed")), new_kv
+
+    xs = (params["dec_blocks"], cache) if cache is not None else params["dec_blocks"]
+    x, new_caches = jax.lax.scan(body, x, xs, unroll=cfg.scan_unroll)
+    logits = unembed(params, x, cfg, ctx)
+    return logits, new_caches
+
+
+def whisper_forward(params, batch: Dict[str, jax.Array], cfg, ctx: ShardCtx = ShardCtx()):
+    """batch: {"frames": (B, T_enc, D), "tokens": (B, T_dec)} -> (logits, aux)."""
+    enc_out = _encode(params, batch["frames"], cfg, ctx)
+    logits, _ = _decode_stack(params, batch["tokens"], enc_out, cfg, ctx)
+    return logits, {}
+
+
+def whisper_prefill(params, batch, cfg, ctx: ShardCtx = ShardCtx()):
+    """Returns (logits, state) with state carrying enc_out + self-KV caches."""
+    enc_out = _encode(params, batch["frames"], cfg, ctx)
+    logits, caches = _decode_stack(
+        params, batch["tokens"], enc_out, cfg, ctx, write_cache=True
+    )
+    return logits, {"enc_out": enc_out, "k": caches["k"], "v": caches["v"]}
+
+
+def whisper_decode(params, tokens, state, pos, cfg, ctx: ShardCtx = ShardCtx()):
+    cache = {"k": state["k"], "v": state["v"]}
+    logits, new_kv = _decode_stack(
+        params, tokens, state["enc_out"], cfg, ctx, cache=cache, pos=pos
+    )
+    new_state = {"enc_out": state["enc_out"], "k": new_kv["k"], "v": new_kv["v"]}
+    return logits, new_state
+
+
+def whisper_cache_specs(cfg, batch: int, enc_len: int, max_dec_len: int):
+    kv, hd = cfg.num_kv_heads, cfg.head_dim_
+    L = cfg.dec_layers
+    return {
+        "enc_out": jax.ShapeDtypeStruct((batch, enc_len, cfg.d_model), cfg.adtype),
+        "k": jax.ShapeDtypeStruct((L, batch, max_dec_len, kv, hd), cfg.adtype),
+        "v": jax.ShapeDtypeStruct((L, batch, max_dec_len, kv, hd), cfg.adtype),
+    }

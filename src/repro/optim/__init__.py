@@ -1,0 +1,21 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.schedules import constant, warmup_cosine
+from repro.optim.zero import zero1_rules, zero1_state_axes
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "clip_by_global_norm",
+    "constant",
+    "warmup_cosine",
+    "zero1_rules",
+    "zero1_state_axes",
+]

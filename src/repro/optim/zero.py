@@ -1,0 +1,38 @@
+"""ZeRO-1: shard AdamW m/v states over the data-parallel axis.
+
+With pjit, optimizer states are first-class sharded arrays: we give them their
+own logical->physical rules where the 'embed' (and fallback largest) axis maps
+to ('pod','data') — so each DP rank owns a 1/|DP| slice of every m/v tensor
+(instead of replicating them), and XLA inserts the gather/scatter around the
+update exactly as hand-written ZeRO would.  Param/activation rules stay
+unchanged.
+
+`zero1_axes(model)` rewrites the model's logical-axes tree for m/v.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.parallel.sharding import DEFAULT_RULES, ShardingRules
+
+__all__ = ["zero1_rules", "zero1_state_axes"]
+
+
+def zero1_rules(base: ShardingRules = DEFAULT_RULES) -> ShardingRules:
+    """Optimizer-state rules: embed dim additionally sharded over DP."""
+    return base.replace(embed=("pod", "data"), layers=None)
+
+
+def zero1_state_axes(param_axes: Any) -> Any:
+    """m/v logical axes == param axes (the rules table does the ZeRO remap).
+
+    Kept as a function so callers can opt specific leaves out (e.g. scalars).
+    """
+    return {
+        "m": param_axes,
+        "v": param_axes,
+        "count": None,
+    }

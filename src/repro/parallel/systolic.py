@@ -1,0 +1,167 @@
+"""Distributed systolic matmul: the mesh array realized on the TPU ICI torus.
+
+The paper's array is a grid of MACs with nearest-neighbour wires; a TPU pod is
+a grid of chips with nearest-neighbour ICI links.  This module runs C = A @ B
+with A, B, C block-sharded over a square (p x p) sub-mesh of devices, using
+`shard_map` + `jax.lax.ppermute` neighbour rotations (Cannon's schedule, which
+is the block-level form of the systolic array).
+
+Hardware adaptation of the paper's step-count claim (DESIGN.md §2):
+
+  * A physical systolic fabric pays the *skew*: hop-by-hop pre-alignment costs
+    up to p-1 neighbour steps, so naive aligned Cannon takes ~2p-1 collective
+    phases — the analogue of the standard array's 3n-2.
+  * ICI is a *switched* torus: an arbitrary permutation is ONE
+    collective-permute.  We fold the whole alignment into a single ppermute
+    over the flattened 2D axis (row i shifts by i — inexpressible as a uniform
+    1D shift, trivial as a 2D permutation).  Total phases: p+1 — the paper's
+    2n-1-style saving, delivered by hardware routing instead of output
+    scrambling.  (The output-permutation trick itself lives at the kernel
+    level, where BlockSpec index_maps play the role of node wiring; block-SPMD
+    cannot express per-device feeding schedules — recorded as an adaptation.)
+  * Compute/comm overlap: each loop step's ppermutes depend only on the
+    *current* buffers, never on the step's matmul, so XLA's latency-hiding
+    scheduler overlaps the neighbour exchange with the MXU work
+    (double-buffering in dataflow form).  The loop is unrolled (p is a static
+    mesh dimension) to give the scheduler full freedom.
+
+`phase_counts()` reports the collective-phase arithmetic for the benchmark
+table; `systolic_matmul` is the user-facing jit entry point.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["systolic_matmul", "systolic_matmul_shardmap", "phase_counts"]
+
+
+def _shift_perm(p: int, shift: int) -> list[Tuple[int, int]]:
+    """Uniform circular shift along one axis: src -> (src - shift) mod p."""
+    return [(s, (s - shift) % p) for s in range(p)]
+
+
+def _alignment_perm_2d(p: int, *, align_a: bool) -> list[Tuple[int, int]]:
+    """Cannon pre-alignment as ONE permutation over the flattened (p, p) axes.
+
+    A: device (i, j) must receive A-block (i, (i + j) mod p)  => row i shifts
+       left by i.  B: device (i, j) must receive B-block ((i + j) mod p, j)
+       => column j shifts up by j.  Flattened index = i * p + j.
+    """
+    perm = []
+    for i in range(p):
+        for j in range(p):
+            if align_a:
+                src = i * p + ((i + j) % p)
+            else:
+                src = ((i + j) % p) * p + j
+            perm.append((src, i * p + j))
+    return perm
+
+
+def phase_counts(p: int) -> dict:
+    """Collective-phase accounting, mirroring the paper's step counts.
+
+    naive (hop-by-hop alignment, the 'standard array' analogue):
+        (p-1) A-hops + (p-1) B-hops happen concurrently -> p-1 phases,
+        then p compute steps with p-1 rotation phases hidden under them.
+    switched (this module, the 'mesh array' analogue):
+        1 alignment permute phase + p compute steps.
+    """
+    return {
+        "p": p,
+        "naive_phases": (p - 1) + p,  # 2p-1  ~ the 3n-2 regime
+        "switched_phases": 1 + p,  # p+1  ~ the 2n-1 regime
+        "paper_standard_steps": 3 * p - 2,
+        "paper_mesh_steps": 2 * p - 1,
+    }
+
+
+def systolic_matmul_shardmap(
+    a_blk: jax.Array,
+    b_blk: jax.Array,
+    *,
+    axis_x: str,
+    axis_y: str,
+    p: int,
+    precision=None,
+) -> jax.Array:
+    """shard_map body: local (m_blk, k_blk) @ (k_blk, n_blk) Cannon loop.
+
+    Call under `shard_map` with a_blk = A[i, j], b_blk = B[i, j] resident and
+    returns the resident C[i, j].  Exposed separately so model TP layers can
+    embed it inside larger shard_map blocks.
+    """
+    both = (axis_x, axis_y)
+
+    # Phase 0: single-permute alignment (the switched-torus skew removal).
+    a_cur = jax.lax.ppermute(a_blk, both, _alignment_perm_2d(p, align_a=True))
+    b_cur = jax.lax.ppermute(b_blk, both, _alignment_perm_2d(p, align_a=False))
+
+    acc = jnp.zeros(
+        (a_blk.shape[0], b_blk.shape[1]),
+        dtype=jnp.promote_types(a_blk.dtype, jnp.float32),
+    )
+    # Unrolled systolic loop: matmul(t) and rotate(t->t+1) both read the
+    # current buffers, so the exchange overlaps the MXU work.
+    for t in range(p):
+        partial_prod = jnp.dot(
+            a_cur, b_cur, preferred_element_type=jnp.float32, precision=precision
+        )
+        if t < p - 1:
+            a_nxt = jax.lax.ppermute(a_cur, axis_y, _shift_perm(p, 1))
+            b_nxt = jax.lax.ppermute(b_cur, axis_x, _shift_perm(p, 1))
+            a_cur, b_cur = a_nxt, b_nxt
+        acc = acc + partial_prod
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axes", "out_dtype"))
+def _systolic_jit(a, b, mesh, axes, out_dtype):
+    axis_x, axis_y = axes
+    p = mesh.shape[axis_x]
+
+    body = functools.partial(
+        systolic_matmul_shardmap, axis_x=axis_x, axis_y=axis_y, p=p
+    )
+    mapped = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_x, axis_y), P(axis_x, axis_y)),
+        out_specs=P(axis_x, axis_y),
+    )
+    return mapped(a, b).astype(out_dtype)
+
+
+def systolic_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    mesh: Mesh,
+    axes: Tuple[str, str] = ("data", "model"),
+    out_dtype=None,
+) -> jax.Array:
+    """C = A @ B with all three matrices block-sharded over a square 2D mesh.
+
+    a: (M, K), b: (K, N); M, K divisible by mesh.shape[axes[0]] and K, N by
+    mesh.shape[axes[1]] — and the mesh must be square on these two axes
+    (production mesh: data=model=16).
+    """
+    axis_x, axis_y = axes
+    p, p2 = mesh.shape[axis_x], mesh.shape[axis_y]
+    if p != p2:
+        raise ValueError(f"systolic matmul needs a square mesh, got {p}x{p2}")
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
+    for dim, div, what in ((m, p, "M"), (k, p, "K"), (n, p, "N")):
+        if dim % div:
+            raise ValueError(f"{what}={dim} not divisible by mesh dim {div}")
+    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+    return _systolic_jit(a, b, mesh, (axis_x, axis_y), out_dtype)

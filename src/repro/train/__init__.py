@@ -1,0 +1,20 @@
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.metrics import MetricsLogger
+from repro.train.train_step import (
+    abstract_train_state,
+    init_train_state,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+__all__ = [
+    "LoopConfig",
+    "train_loop",
+    "MetricsLogger",
+    "init_train_state",
+    "abstract_train_state",
+    "make_train_step",
+    "make_serve_step",
+    "make_prefill_step",
+]

@@ -1,0 +1,107 @@
+"""Fault-tolerant training loop.
+
+Mechanics (all exercised by tests/test_fault_tolerance.py):
+  * periodic checkpoints (sync or async) + auto-resume from latest,
+  * crash recovery: a step that raises is retried from the last checkpoint
+    (up to max_restarts); the deterministic step-indexed data pipeline makes
+    recovery bit-exact,
+  * straggler mitigation: per-step wall-clock deadline; slow steps are logged
+    and counted (on real fleets the same hook triggers hot-spare swap),
+  * failure injection hook for tests (`failure_hook(step) -> None|raise`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.train.metrics import MetricsLogger
+
+__all__ = ["LoopConfig", "train_loop"]
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_every: int = 50
+    max_restarts: int = 3
+    step_deadline_s: Optional[float] = None  # straggler threshold
+    log_every: int = 10
+
+
+def train_loop(
+    train_step: Callable,
+    state: Dict[str, Any],
+    data_iter,
+    cfg: LoopConfig,
+    ckpt: Optional[CheckpointManager] = None,
+    logger: Optional[MetricsLogger] = None,
+    failure_hook: Optional[Callable[[int], None]] = None,
+    checkpointer=None,  # optional AsyncCheckpointer wrapping `ckpt`
+) -> Dict[str, Any]:
+    """Runs to cfg.total_steps; returns the final state.
+
+    `data_iter` must expose .state()/.restore(step) (see data/pipeline.py);
+    checkpoint metadata records the data position so resume is exact.
+    """
+    logger = logger or MetricsLogger()
+    step = int(jax.device_get(state["step"]))
+    restarts = 0
+    stragglers = 0
+
+    def save(step_i: int) -> None:
+        if ckpt is None:
+            return
+        meta = {"data_step": data_iter.state()}
+        if checkpointer is not None:
+            checkpointer.submit(step_i, state, meta)
+        else:
+            ckpt.save(step_i, state, meta)
+
+    while step < cfg.total_steps:
+        try:
+            if failure_hook is not None:
+                failure_hook(step)
+            batch = next(data_iter)
+            t0 = time.monotonic()
+            state, metrics = train_step(state, batch)
+            jax.block_until_ready(state["step"])
+            dt = time.monotonic() - t0
+            if cfg.step_deadline_s is not None and dt > cfg.step_deadline_s:
+                stragglers += 1
+                logger.warn(
+                    f"straggler: step {step} took {dt:.3f}s "
+                    f"(deadline {cfg.step_deadline_s}s) — count={stragglers}"
+                )
+            step += 1
+            if step % cfg.log_every == 0 or step == cfg.total_steps:
+                logger.log(step, jax.tree.map(lambda m: float(jax.device_get(m)), metrics))
+            if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
+                save(step)
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:  # crash recovery path
+            restarts += 1
+            if ckpt is None or restarts > cfg.max_restarts:
+                raise
+            if checkpointer is not None:
+                checkpointer.wait()
+            latest = ckpt.latest_step()
+            logger.warn(
+                f"step {step} failed ({type(e).__name__}: {e}); "
+                f"restoring step {latest} (restart {restarts}/{cfg.max_restarts})"
+            )
+            if latest is None:
+                raise
+            state = ckpt.restore(latest, state)
+            data_iter.restore(ckpt.meta(latest)["data_step"])
+            step = latest
+    if checkpointer is not None:
+        checkpointer.wait()
+    logger.summary({"restarts": restarts, "stragglers": stragglers, "final_step": step})
+    return state

@@ -1,0 +1,39 @@
+"""Minimal structured metrics logging (stdout + optional JSONL file)."""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+__all__ = ["MetricsLogger"]
+
+
+class MetricsLogger:
+    def __init__(self, path: Optional[str] = None, stream=None):
+        self.path = path
+        self.stream = stream or sys.stdout
+        self._fh = open(path, "a") if path else None
+        self.history: list = []
+
+    def log(self, step: int, metrics: Dict[str, Any]) -> None:
+        rec = {"step": step, "t": time.time(), **metrics}
+        self.history.append(rec)
+        short = " ".join(
+            f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in metrics.items()
+        )
+        print(f"[step {step}] {short}", file=self.stream)
+        if self._fh:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+
+    def warn(self, msg: str) -> None:
+        print(f"[warn] {msg}", file=self.stream)
+
+    def summary(self, info: Dict[str, Any]) -> None:
+        print(f"[summary] {json.dumps(info)}", file=self.stream)
+        if self._fh:
+            self._fh.write(json.dumps({"summary": info}) + "\n")
+            self._fh.flush()

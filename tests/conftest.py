@@ -1,0 +1,20 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override is exclusive to launch/dryrun.py)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_off():
+    # Framework targets bf16/f32; keep default f32 semantics.
+    yield
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_report_header(config):
+    return f"jax {jax.__version__} devices={jax.devices()}"

@@ -1,0 +1,215 @@
+"""Checkpointing + fault-tolerant loop: atomicity, resume, crash recovery,
+async writer, straggler accounting, elastic re-mesh restore."""
+
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.async_writer import AsyncCheckpointer
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import get_model
+from repro.optim import constant
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.metrics import MetricsLogger
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def _tiny_setup(tmp_path, vocab=64, steps_data_seed=0):
+    cfg = get_config("qwen2-7b").reduced()
+    model = get_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model, constant(1e-3)))
+    data = SyntheticLM(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4, seed=steps_data_seed)
+    )
+    ckpt = CheckpointManager(str(tmp_path), keep_n=2)
+    return model, state, step_fn, data, ckpt
+
+
+# --- manager -------------------------------------------------------------------
+
+
+def test_save_restore_roundtrip(tmp_path):
+    _, state, _, _, ckpt = _tiny_setup(tmp_path)
+    ckpt.save(3, state, {"data_step": 3})
+    restored = ckpt.restore(3, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ckpt.meta(3)["data_step"] == 3
+
+
+def test_bf16_leaves_roundtrip(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(8, dtype=jnp.bfloat16) / 3, "n": jnp.int32(7)}
+    ckpt.save(1, tree)
+    out = ckpt.restore(1, tree)
+    np.testing.assert_array_equal(
+        np.asarray(out["w"], np.float32), np.asarray(tree["w"], np.float32)
+    )
+    assert out["w"].dtype == jnp.bfloat16
+
+
+def test_keep_n_gc(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep_n=2)
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, tree)
+    assert ckpt.all_steps() == [3, 4]
+
+
+def test_shape_mismatch_raises(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save(1, {"x": jnp.zeros((2,))})
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(1, {"x": jnp.zeros((3,))})
+
+
+def test_missing_leaf_raises(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save(1, {"x": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        ckpt.restore(1, {"x": jnp.zeros((2,)), "y": jnp.zeros((1,))})
+
+
+def test_crashed_write_never_looks_complete(tmp_path):
+    """A .tmp_save_* dir (simulated crash) is invisible to all_steps()."""
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save(5, {"x": jnp.zeros((2,))})
+    os.makedirs(os.path.join(str(tmp_path), ".tmp_save_crashed"), exist_ok=True)
+    with open(os.path.join(str(tmp_path), ".tmp_save_crashed", "arrays.npz"), "w") as f:
+        f.write("partial")
+    assert ckpt.all_steps() == [5]
+    assert ckpt.latest_step() == 5
+
+
+def test_overwrite_same_step_atomic(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save(1, {"x": jnp.zeros((2,))})
+    ckpt.save(1, {"x": jnp.ones((2,))})
+    out = ckpt.restore(1, {"x": jnp.zeros((2,))})
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.ones((2,)))
+
+
+# --- async writer ---------------------------------------------------------------
+
+
+def test_async_checkpointer(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    writer = AsyncCheckpointer(ckpt)
+    tree = {"x": jnp.arange(4, dtype=jnp.float32)}
+    for s in (1, 2, 3):
+        writer.submit(s, jax.tree.map(lambda t: t + s, tree), {"data_step": s})
+    writer.wait()
+    assert ckpt.all_steps() == [1, 2, 3]
+    out = ckpt.restore(2, tree)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.arange(4) + 2)
+    writer.close()
+
+
+def test_async_checkpointer_snapshot_semantics(tmp_path):
+    """The tree is snapshotted at submit() — later mutation can't corrupt it."""
+    ckpt = CheckpointManager(str(tmp_path))
+    writer = AsyncCheckpointer(ckpt)
+    arr = np.zeros(4, np.float32)
+    writer.submit(1, {"x": arr})
+    arr += 99  # mutate after submit
+    writer.wait()
+    out = ckpt.restore(1, {"x": jnp.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.zeros(4))
+    writer.close()
+
+
+# --- fault-tolerant loop -----------------------------------------------------------
+
+
+def test_loop_runs_and_checkpoints(tmp_path):
+    model, state, step_fn, data, ckpt = _tiny_setup(tmp_path)
+    cfg = LoopConfig(total_steps=12, ckpt_every=5, log_every=100)
+    final = train_loop(step_fn, state, data, cfg, ckpt=ckpt)
+    assert int(final["step"]) == 12
+    assert 10 in ckpt.all_steps() and 12 in ckpt.all_steps()
+    assert ckpt.meta(10)["data_step"] == 10
+
+
+def test_loop_crash_recovery_bit_exact(tmp_path):
+    """Inject a crash at step 7; loop must restore step 5 and finish, and the
+    final params must equal a crash-free run (deterministic data replay)."""
+    model, state0, step_fn, data, ckpt = _tiny_setup(tmp_path)
+    crashed = {"done": False}
+
+    def bomb(step):
+        if step == 7 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected node failure")
+
+    cfg = LoopConfig(total_steps=10, ckpt_every=5, max_restarts=2, log_every=100)
+    final = train_loop(step_fn, state0, data, cfg, ckpt=ckpt, failure_hook=bomb)
+    assert crashed["done"]
+    assert int(final["step"]) == 10
+
+    # crash-free reference run (same init, same data)
+    model2, state2, step2, data2, ckpt2 = _tiny_setup(str(tmp_path) + "_ref")
+    cfg2 = LoopConfig(total_steps=10, ckpt_every=100, log_every=100)
+    ref = train_loop(step2, state2, data2, cfg2)
+    for a, b in zip(jax.tree.leaves(final["params"]), jax.tree.leaves(ref["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_loop_gives_up_after_max_restarts(tmp_path):
+    model, state, step_fn, data, ckpt = _tiny_setup(tmp_path)
+
+    def always_bomb(step):
+        if step >= 3:
+            raise RuntimeError("persistent failure")
+
+    cfg = LoopConfig(total_steps=10, ckpt_every=2, max_restarts=2, log_every=100)
+    with pytest.raises(RuntimeError, match="persistent"):
+        train_loop(step_fn, state, data, cfg, ckpt=ckpt, failure_hook=always_bomb)
+
+
+def test_loop_straggler_accounting(tmp_path, capsys):
+    import time
+
+    model, state, step_fn, data, ckpt = _tiny_setup(tmp_path)
+    slow = {"n": 0}
+
+    def laggy(step):
+        if step == 2:
+            slow["n"] += 1
+            time.sleep(0.05)
+
+    cfg = LoopConfig(total_steps=4, ckpt_every=100, step_deadline_s=0.04, log_every=100)
+    logger = MetricsLogger()
+    train_loop(step_fn, state, data, cfg, logger=logger, failure_hook=laggy)
+    out = capsys.readouterr().out
+    assert "straggler" in out
+
+
+# --- elastic re-mesh restore ----------------------------------------------------
+
+
+def test_elastic_restore_onto_mesh(tmp_path):
+    """Checkpoints store logical arrays; restore device_puts onto any mesh."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.parallel.sharding import DEFAULT_RULES, tree_shardings
+
+    cfg = get_config("qwen2-7b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save(1, params)
+
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    shardings = tree_shardings(model.logical_axes(), mesh, DEFAULT_RULES, params)
+    restored = ckpt.restore(1, model.abstract_params(), shardings=shardings)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    leaf = jax.tree.leaves(restored)[0]
+    assert leaf.sharding.mesh.shape == {"data": 1, "model": 1}

@@ -1,0 +1,261 @@
+"""Distributed building blocks on small multi-device CPU meshes.
+
+Runs under the default 1-CPU runtime by building meshes over however many
+devices exist (1 is fine: shard_map still exercises the collective code
+paths; ppermute/psum become identities).  For real multi-device coverage,
+tests that NEED >1 device spawn a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=4 — keeping the main test
+process at 1 device per the harness contract.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.mesh import make_local_mesh
+from repro.parallel.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    logical_to_physical,
+    named_sharding,
+    tree_shardings,
+)
+from repro.parallel.pipeline import bubble_fraction
+from repro.parallel.systolic import phase_counts
+
+
+def _run_subprocess(body: str, n_dev: int = 4) -> str:
+    """Run a snippet under a forced n-device CPU runtime; returns stdout."""
+    prog = textwrap.dedent(body)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + f" --xla_force_host_platform_device_count={n_dev}"
+    )
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", prog],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-4000:]}"
+    return out.stdout
+
+
+# --- sharding rules -----------------------------------------------------------
+
+
+def test_logical_to_physical_basic():
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    spec = logical_to_physical(("batch", "seq", "embed"), mesh, DEFAULT_RULES)
+    assert spec == jax.sharding.PartitionSpec("data", None, None)
+    spec = logical_to_physical(("embed", "mlp"), mesh, DEFAULT_RULES)
+    assert spec == jax.sharding.PartitionSpec(None, "model")
+
+
+def test_duplicate_physical_axis_dropped():
+    """A mesh axis may appear once per spec: later logical dims go replicated."""
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    rules = ShardingRules.make({"seq": "data"})  # batch also maps to data
+    spec = logical_to_physical(("batch", "seq", "embed"), mesh, rules)
+    assert spec == jax.sharding.PartitionSpec("data", None, None)
+
+
+def test_missing_mesh_axis_dropped():
+    """'pod' rules are harmless on a single-pod mesh."""
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    spec = logical_to_physical(("batch",), mesh, DEFAULT_RULES)  # ('pod','data')
+    assert spec == jax.sharding.PartitionSpec("data")
+
+
+def test_indivisible_dim_falls_back_to_replicated():
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    # vocab=49155 not divisible by model axis (1 divides everything — use a
+    # fake 2-wide check through the helper's arithmetic instead)
+    from repro.parallel.sharding import _drop_indivisible
+
+    spec = jax.sharding.PartitionSpec("model", None)
+
+    class FakeMesh:
+        shape = {"data": 4, "model": 16}
+
+    out = _drop_indivisible(spec, (49155, 128), FakeMesh())
+    assert out == jax.sharding.PartitionSpec(None, None)
+    out2 = _drop_indivisible(spec, (49152, 128), FakeMesh())
+    assert out2 == jax.sharding.PartitionSpec("model", None)
+
+
+def test_tree_shardings_structure():
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    tree = {"w": ("embed", "mlp"), "b": None}
+    avals = {"w": jax.ShapeDtypeStruct((8, 16), jnp.float32), "b": jax.ShapeDtypeStruct((), jnp.float32)}
+    sh = tree_shardings(tree, mesh, DEFAULT_RULES, avals)
+    assert sh["w"].spec == jax.sharding.PartitionSpec(None, "model")
+    assert sh["b"].spec == jax.sharding.PartitionSpec()
+
+
+# --- paper phase counts --------------------------------------------------------
+
+
+def test_systolic_phase_counts_track_paper():
+    """switched-torus Cannon: p+1 phases (2n-1 regime) vs naive 2p-1 (3n-2)."""
+    for p in (2, 4, 8, 16):
+        pc = phase_counts(p)
+        assert pc["switched_phases"] == p + 1
+        assert pc["naive_phases"] == 2 * p - 1
+        assert pc["paper_mesh_steps"] == 2 * p - 1
+        assert pc["paper_standard_steps"] == 3 * p - 2
+        # the mesh/standard saving and the switched/naive saving agree ~2/3
+        if p > 2:  # p=2: both schedules already minimal (3 phases)
+            assert pc["switched_phases"] < pc["naive_phases"]
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(4, 12) == pytest.approx(3 / 15)
+    assert bubble_fraction(1, 8) == 0.0
+
+
+# --- multi-device behaviour (subprocess with 4 CPU devices) -------------------
+
+
+@pytest.mark.slow
+def test_systolic_matmul_4dev():
+    out = _run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_local_mesh
+        from repro.parallel.systolic import systolic_matmul
+        mesh = make_local_mesh((2, 2), ("data", "model"))
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.normal(size=(8, 12)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(12, 16)).astype(np.float32))
+        # K must divide both mesh axes (2): 12 ok; M=8, N=16 ok
+        out = systolic_matmul(a, b, mesh=mesh, axes=("data", "model"))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b), rtol=1e-4, atol=1e-4)
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_ring_collective_matmuls_4dev():
+    out = _run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_local_mesh
+        from repro.parallel.collectives import ring_allgather_matmul, matmul_ring_reducescatter
+        mesh = make_local_mesh((4,), ("model",))
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(8, 12)).astype(np.float32))
+        # ring all-gather matmul: X row-sharded, W replicated
+        f = jax.shard_map(
+            lambda xb, wb: ring_allgather_matmul(xb, wb, "model"),
+            mesh=mesh, in_specs=(P("model", None), P()), out_specs=P(), check_vma=False,
+        )
+        np.testing.assert_allclose(np.asarray(f(x, w))[:16], np.asarray(x @ w), rtol=1e-4, atol=1e-4)
+        # matmul + ring reduce-scatter: X col-sharded, W row-sharded
+        g = jax.shard_map(
+            lambda xb, wb: matmul_ring_reducescatter(xb, wb, "model"),
+            mesh=mesh, in_specs=(P(None, "model"), P("model", None)), out_specs=P("model", None), check_vma=False,
+        )
+        np.testing.assert_allclose(np.asarray(g(x, w)), np.asarray(x @ w), rtol=1e-4, atol=1e-4)
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_compressed_allreduce_4dev():
+    out = _run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_local_mesh
+        from repro.parallel.compression import compressed_psum_mean, init_error_state
+        mesh = make_local_mesh((4,), ("data",))
+        rng = np.random.default_rng(2)
+        g = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))  # per-dev rows
+        e = jnp.zeros((4, 64), jnp.float32)
+        f = jax.shard_map(
+            lambda gb, eb: compressed_psum_mean(gb[0], eb[0], ("data",)),
+            mesh=mesh, in_specs=(P("data", None), P("data", None)),
+            out_specs=(P(), P("data")), check_vma=False,
+        )
+        mean, new_e = f(g, e)
+        true_mean = np.asarray(g).mean(0)
+        err = np.abs(np.asarray(mean) - true_mean).max()
+        scale = np.abs(np.asarray(g)).max() / 127.0
+        assert err <= 4 * scale + 1e-6, (err, scale)
+        # error feedback: residual equals quantization error exactly
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_pipeline_parallel_4dev():
+    out = _run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_local_mesh
+        from repro.parallel.pipeline import pipeline_apply
+        mesh = make_local_mesh((4,), ("stage",))
+        rng = np.random.default_rng(3)
+        ws = jnp.asarray(rng.normal(size=(4, 8, 8)).astype(np.float32)) * 0.5
+        x = jnp.asarray(rng.normal(size=(6, 2, 8)).astype(np.float32))  # (micro, mb, d)
+        def stage_fn(w, h):
+            return jnp.tanh(h @ w)
+        out = pipeline_apply(stage_fn, ws, x, mesh=mesh, axis="stage")
+        # reference: sequential application of all 4 stages
+        ref = x
+        for s in range(4):
+            ref = jnp.tanh(ref @ ws[s])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_dp_train_step_compressed_4dev():
+    """int8 error-feedback DP training converges on a toy problem."""
+    out = _run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import get_model
+        from repro.optim import constant
+        from repro.train.train_step import (
+            init_dp_train_state_compressed, make_dp_train_step_compressed)
+        mesh = make_local_mesh((4,), ("data",))
+        cfg = get_config("qwen2-7b").reduced()
+        model = get_model(cfg)
+        state = init_dp_train_state_compressed(model, jax.random.PRNGKey(0), mesh)
+        step = make_dp_train_step_compressed(model, constant(3e-3), mesh, dp_axes=("data",))
+        step = jax.jit(step)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab_size)
+        batch = {"tokens": toks.astype(jnp.int32), "labels": jnp.roll(toks, -1, 1).astype(jnp.int32)}
+        losses = []
+        for i in range(15):  # overfit one batch: compressed grads must descend
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.5, losses
+        print("OK", losses[0], losses[-1])
+        """
+    )
+    assert "OK" in out
