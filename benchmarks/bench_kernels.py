@@ -4,7 +4,13 @@ CPU container caveat: Pallas runs in interpret mode here (Python per block —
 not a performance measurement), so the kernel rows report the *structural*
 quantities that determine TPU performance: VMEM working set per grid cell,
 HBM bytes per block phase with/without the mesh stagger, and arithmetic
-intensity.  XLA GEMM wall-time is measured for scale context.
+intensity.  Each row also records the block triple the autotuner resolves for
+that shape (model-scored on CPU, timed on TPU — kernels/autotune.py).  XLA
+GEMM wall-time is measured for scale context.
+
+`run(as_dict=True)` returns the whole section as a JSON-able dict — the
+payload `benchmarks/run.py --json` writes to BENCH_kernels.json so the perf
+trajectory is tracked across PRs.
 """
 
 import time
@@ -13,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import autotune
 from repro.kernels.ref import matmul_ref
 
 
@@ -39,18 +46,28 @@ def kernel_structure_row(m, k, n, bm=128, bn=128, bk=128, dtype_bytes=2):
     )
 
 
-def run(csv=False):
-    print("# mesh-matmul kernel structure (TPU-facing; BlockSpec-derived)")
-    rows = [
-        kernel_structure_row(512, 512, 512),
-        kernel_structure_row(4096, 4096, 4096),
-        kernel_structure_row(8192, 1024, 8192),
-        kernel_structure_row(2048, 16384, 2048),
-    ]
-    header = list(rows[0])
+BENCH_SHAPES = [
+    (512, 512, 512),
+    (4096, 4096, 4096),
+    (8192, 1024, 8192),
+    (2048, 16384, 2048),
+]
+
+
+def run(csv=False, as_dict=False):
+    result = {"structure": [], "autotune": {}, "xla_gemm": [], "allclose_max_err": None}
+
+    print("# mesh-matmul kernel structure (TPU-facing; autotuned block shapes)")
+    for m, k, n in BENCH_SHAPES:
+        bm, bn, bk = autotune.autotune(m, k, n, jnp.bfloat16, "pallas_mesh")
+        row = kernel_structure_row(m, k, n, bm=bm, bn=bn, bk=bk)
+        row["blocks"] = f"{bm}x{bn}x{bk}"
+        result["structure"].append(row)
+        result["autotune"][f"{m}x{k}x{n}|bfloat16"] = [bm, bn, bk]
+    header = list(result["structure"][0])
     print(",".join(header))
-    for r in rows:
-        print(",".join(str(r[k]) for k in header))
+    for r in result["structure"]:
+        print(",".join(str(r[key]) for key in header))
 
     print("\n# XLA GEMM wall-time on this host (scale context only)")
     print("mkn,dtype,ms,gflops")
@@ -67,6 +84,10 @@ def run(csv=False):
         out.block_until_ready()
         dt = (time.perf_counter() - t0) / iters
         print(f"{m}x{k}x{n},f32,{dt*1e3:.2f},{2*m*k*n/dt/1e9:.1f}")
+        result["xla_gemm"].append(
+            dict(mkn=f"{m}x{k}x{n}", dtype="f32", ms=round(dt * 1e3, 3),
+                 gflops=round(2 * m * k * n / dt / 1e9, 1))
+        )
 
     print("\n# Pallas kernel allclose sweep (interpret mode) — correctness gate")
     from repro.kernels.mesh_matmul import mesh_matmul_pallas
@@ -82,9 +103,20 @@ def run(csv=False):
             )
             err = float(jnp.max(jnp.abs(got - matmul_ref(a, b))))
             worst = max(worst, err)
+    # fused-epilogue gate rides along: one bias+activation cell
+    bias = jnp.asarray(rng.normal(size=(2 * B,)).astype(np.float32))
+    a = jnp.asarray(rng.normal(size=(2 * B, B)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(B, 2 * B)).astype(np.float32))
+    got = mesh_matmul_pallas(
+        a, b, bias=bias, activation="relu", block_m=B, block_n=B, block_k=B,
+        interpret=True,
+    )
+    err = float(jnp.max(jnp.abs(got - jnp.maximum(a @ b + bias, 0.0))))
+    worst = max(worst, err)
     print(f"max_abs_err,{worst:.2e}")
     assert worst < 1e-4
-    return rows
+    result["allclose_max_err"] = worst
+    return result if as_dict else result["structure"]
 
 
 if __name__ == "__main__":

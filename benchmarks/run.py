@@ -13,6 +13,8 @@ Sections:
 """
 
 import argparse
+import json
+import platform
 import time
 import traceback
 
@@ -57,17 +59,49 @@ SECTIONS = {
 }
 
 
+def _write_kernels_json(payload: dict, wall_s: float, out_path: str) -> None:
+    """BENCH_kernels.json: the cross-PR perf-trajectory artifact (ISSUE 2).
+
+    Structural metrics + host wall-times + the block shapes the autotuner
+    chose, with enough provenance (jax version / backend) to compare runs."""
+    import jax
+
+    doc = {
+        "version": 1,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "host": platform.machine(),
+        "wall_s": round(wall_s, 2),
+        **payload,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"[kernels] wrote {out_path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=sorted(SECTIONS))
+    ap.add_argument(
+        "--json",
+        action="store_true",
+        help="write the kernels section's metrics to BENCH_kernels.json",
+    )
+    ap.add_argument("--json-path", default="BENCH_kernels.json")
     args = ap.parse_args()
     names = [args.only] if args.only else list(SECTIONS)
+    if args.json and "kernels" not in names:
+        names.append("kernels")
     failed = []
     for name in names:
         print(f"\n{'=' * 72}\n== bench: {name}\n{'=' * 72}")
         t0 = time.perf_counter()
         try:
-            SECTIONS[name]()
+            if name == "kernels" and args.json:
+                payload = bench_kernels.run(as_dict=True)
+                _write_kernels_json(payload, time.perf_counter() - t0, args.json_path)
+            else:
+                SECTIONS[name]()
             print(f"[{name}] done in {time.perf_counter() - t0:.1f}s")
         except Exception:
             traceback.print_exc()

@@ -21,6 +21,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.launch.mesh import make_local_mesh
 from repro.parallel.collectives import ring_allgather_matmul
+from repro.parallel.sharding import shard_map
 from repro.parallel.systolic import phase_counts, systolic_matmul
 
 print(f"devices: {jax.device_count()}")
@@ -47,7 +48,7 @@ mesh1d = make_local_mesh((4,), ("model",))
 x = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
 w = jnp.asarray(rng.normal(size=(8, 12)).astype(np.float32))
 f = jax.jit(
-    jax.shard_map(
+    shard_map(
         lambda xb, wb: ring_allgather_matmul(xb, wb, "model"),
         mesh=mesh1d,
         in_specs=(P("model", None), P()),

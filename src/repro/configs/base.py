@@ -72,6 +72,11 @@ class ArchConfig:
     activation_dtype: str = "bfloat16"
     remat_policy: str = "dots"  # none | dots | full
     use_mesh_kernel: bool = False  # route GEMMs through the Pallas mesh kernel
+    mesh_block_m: int = 0  # kernel block shape overrides; 0 = resolve via the
+    mesh_block_n: int = 0  # persistent autotune cache (kernels/autotune.py,
+    mesh_block_k: int = 0  # DESIGN.md §3)
+    fused_dense_epilogue: bool = True  # bias+activation+residual inside the
+    # kernel's final-k flush (DESIGN.md §3); False = separate XLA ops (A/B lever)
     scramble_privacy: bool = False  # apply S to activations (scrambling system)
     scan_unroll: bool = False  # unroll layer scans (cost-probe lowering only:
     # XLA cost_analysis counts a while body ONCE, so roofline probes lower

@@ -1,7 +1,11 @@
 """Pallas TPU kernels for the mesh-array technique + jit wrappers and oracles.
 
-mesh_matmul.py      staggered-k blocked matmul (+ fused scramble output)
+mesh_matmul.py      staggered-k blocked matmul: fused scramble output, fused
+                    bias/activation/residual epilogue, batched (b, i, j, k)
+                    grid variant
 scramble_kernel.py  S^k as a scalar-prefetch block-permutation kernel
+autotune.py         block-shape autotuner: VMEM-budget candidate pruning,
+                    timed/model search, versioned persistent cache
 ops.py              public dispatch (xla | pallas_mesh | pallas_mesh_scrambled)
 ref.py              pure-jnp oracles all kernels are tested against
 """

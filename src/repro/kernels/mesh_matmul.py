@@ -13,16 +13,27 @@ granularity the same idea becomes:
     block-level form of Cannon's alignment).
   * **Fused scramble output** — optionally the grid cell (i, j) computes the
     *standard* block sigma(i, j) and writes it at cell (i, j), so the output
-    lands in the paper's scrambled arrangement at zero extra bytes: the
-    permutation is folded into the output BlockSpec index_map exactly as the
-    array's wiring folds it into node placement.
+    lands in the paper's scrambled arrangement at zero extra bytes.  The
+    sigma tables are precomputed host-side (numpy, once per grid size) and fed
+    through *scalar prefetch*, so the BlockSpec index_maps are single SMEM
+    lookups on the scalar core — not re-derived closed-form arithmetic per
+    grid step.
+  * **Fused epilogue** (DESIGN.md §3) — bias add, activation, and an optional
+    residual add execute inside the `k == nk-1` flush while the f32
+    accumulator is still in VMEM, so a dense layer (y = act(xW + b) [+ r]) is
+    one kernel instead of a GEMM followed by 2-3 XLA elementwise passes over
+    HBM.
+  * **Batched grid** — `mesh_matmul_pallas_batched` runs (B, M, K) @ (B, K, N)
+    as a single `pallas_call` with grid (b, i, j, k), replacing the
+    per-element vmap launch (one kernel, one tuning decision, b parallel).
 
 The kernel accumulates in a float32 VMEM scratch across the arbitrary
-(sequential) k dimension and casts once on the final k step.  Block shapes
-default to MXU-aligned (128, 128, 128).
+(sequential) k dimension and applies the epilogue + cast once on the final k
+step.  Block shapes default to MXU-aligned (128, 128, 128); `ops.matmul`
+resolves them through `kernels/autotune.py` when not given.
 
 Validated on CPU with interpret=True against `repro.kernels.ref` oracles;
-compiled path targets TPU (dimension_semantics marks i/j parallel).
+compiled path targets TPU (dimension_semantics marks b/i/j parallel).
 """
 
 from __future__ import annotations
@@ -43,26 +54,40 @@ except ImportError:  # pragma: no cover
     pltpu = None
     _HAVE_PLTPU = False
 
-from repro.core.scramble import sigma_traced
+from repro.core.scramble import _scramble_perm_np
 
-__all__ = ["mesh_matmul_pallas"]
+__all__ = [
+    "ACTIVATIONS",
+    "mesh_matmul_pallas",
+    "mesh_matmul_pallas_batched",
+    "sigma_block_table",
+]
 
 
-def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
-    """Grid (i, j, k): accumulate a_ref @ b_ref into acc, flush on last k."""
-    k = pl.program_id(2)
+# Epilogue activations: f32 in, f32 out, Pallas-lowerable (no erf — the tanh
+# gelu matches jax.nn.gelu(approximate=True), the framework default).
+# GELU_C/GELU_A are shared with the analytic derivative in ops._gelu_grad —
+# change the approximation here and the gradient follows.
+GELU_C = 0.7978845608028654  # sqrt(2/pi)
+GELU_A = 0.044715
 
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+ACTIVATIONS = {
+    None: lambda x: x,
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "silu": lambda x: x * jax.lax.logistic(x),
+    "sigmoid": jax.lax.logistic,
+    "tanh": jnp.tanh,
+    "gelu": lambda x: 0.5 * x * (1.0 + jnp.tanh(GELU_C * (x + GELU_A * x * x * x))),
+}
 
-    acc_ref[...] += jnp.dot(
-        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
-    )
 
-    @pl.when(k == nk - 1)
-    def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+@functools.lru_cache(maxsize=None)
+def sigma_block_table(g: int) -> np.ndarray:
+    """Host-side sigma table: flat standard block index (p*g + q) held at each
+    mesh cell, row-major over cells.  Computed once per grid size with numpy
+    and passed to the kernel via scalar prefetch."""
+    return _scramble_perm_np(g).astype(np.int32)
 
 
 def _stagger(i, j, k, nk):
@@ -70,80 +95,184 @@ def _stagger(i, j, k, nk):
     return jax.lax.rem(i + j + k, nk)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "block_m",
-        "block_n",
-        "block_k",
-        "stagger",
-        "scramble_out",
-        "out_dtype",
-        "interpret",
-    ),
-)
-def mesh_matmul_pallas(
-    a: jax.Array,
-    b: jax.Array,
-    *,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 128,
-    stagger: bool = True,
-    scramble_out: bool = False,
-    out_dtype: Optional[jnp.dtype] = None,
-    interpret: bool = False,
-) -> jax.Array:
-    """C = A @ B on the mesh-array schedule.
+def _make_kernel(
+    *, nk: int, k_axis: int, activation: Optional[str], has_bias: bool,
+    has_residual: bool, has_sigma: bool, batched: bool
+):
+    """Build the kernel body for one configuration of fused operands.
 
-    Args:
-      a: (M, K);  b: (K, N).  M, N, K must divide by the block shape (the
-        `ops.matmul` wrapper pads arbitrary shapes).
-      stagger: rotate each tile's k-loop by (i + j) mod nk (the paper's
-        no-padding feeding).  False gives the standard k-ordered schedule —
-        kept selectable so benchmarks can compare the two schedules.
-      scramble_out: land the output in the paper's scrambled block
-        arrangement (requires a square output block grid).
-      interpret: run the kernel body in Python on CPU (validation mode).
+    Ref order (after optional scalar-prefetch sigma table, consumed only by
+    the index_maps): a, b, [bias], [residual], out, acc_scratch.
     """
-    m, k_dim = a.shape
-    k2, n = b.shape
-    if k_dim != k2:
-        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    act = ACTIVATIONS[activation]
+
+    def kernel(*refs):
+        refs = list(refs)
+        if has_sigma:
+            refs.pop(0)
+        a_ref, b_ref = refs[0], refs[1]
+        pos = 2
+        bias_ref = res_ref = None
+        if has_bias:
+            bias_ref, pos = refs[pos], pos + 1
+        if has_residual:
+            res_ref, pos = refs[pos], pos + 1
+        o_ref, acc_ref = refs[pos], refs[pos + 1]
+
+        k = pl.program_id(k_axis)
+
+        @pl.when(k == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        a_blk = a_ref[0] if batched else a_ref[...]
+        b_blk = b_ref[0] if batched else b_ref[...]
+        acc_ref[...] += jnp.dot(a_blk, b_blk, preferred_element_type=jnp.float32)
+
+        @pl.when(k == nk - 1)
+        def _flush():
+            out = acc_ref[...]
+            if bias_ref is not None:
+                out = out + bias_ref[...].astype(jnp.float32)  # (1, bn) bcast
+            out = act(out)
+            if res_ref is not None:
+                r = res_ref[0] if batched else res_ref[...]
+                out = out + r.astype(jnp.float32)
+            if batched:
+                o_ref[0] = out.astype(o_ref.dtype)
+            else:
+                o_ref[...] = out.astype(o_ref.dtype)
+
+    return kernel
+
+
+def _check_epilogue(activation, bias, residual, m, n, n_batch):
+    if activation not in ACTIVATIONS:
+        raise ValueError(
+            f"activation must be one of {sorted(k for k in ACTIVATIONS if k)},"
+            f" got {activation!r}"
+        )
+    if bias is not None and bias.shape != (n,):
+        raise ValueError(f"bias must have shape ({n},), got {bias.shape}")
+    want_res = (m, n) if n_batch is None else (n_batch, m, n)
+    if residual is not None and residual.shape != want_res:
+        raise ValueError(f"residual must have shape {want_res}, got {residual.shape}")
+
+
+def _pallas_matmul(
+    a,
+    b,
+    bias,
+    residual,
+    *,
+    block_m,
+    block_n,
+    block_k,
+    stagger,
+    scramble_out,
+    activation,
+    out_dtype,
+    interpret,
+    batched,
+):
+    """Shared 2D/batched pallas_call assembly."""
+    if batched:
+        n_batch, m, k_dim = a.shape
+        n = b.shape[-1]
+        if b.shape != (n_batch, k_dim, n):
+            raise ValueError(f"batched contraction mismatch: {a.shape} @ {b.shape}")
+    else:
+        n_batch = None
+        m, k_dim = a.shape
+        k2, n = b.shape
+        if k_dim != k2:
+            raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
     if m % block_m or n % block_n or k_dim % block_k:
         raise ValueError(
-            f"shape ({m},{k_dim})x({k2},{n}) not divisible by blocks "
+            f"shape ({m},{k_dim})x({k_dim},{n}) not divisible by blocks "
             f"({block_m},{block_n},{block_k})"
         )
     out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+    _check_epilogue(activation, bias, residual, m, n, n_batch)
     nm, nn, nk = m // block_m, n // block_n, k_dim // block_k
 
+    if scramble_out and nm != nn:
+        raise ValueError(f"scramble_out needs square block grid, got {nm}x{nn}")
+
+    grid = (n_batch, nm, nn, nk) if batched else (nm, nn, nk)
+    k_axis = len(grid) - 1
+
+    def kk_of(i, j, k):
+        return _stagger(i, j, k, nk) if stagger else k
+
+    # index_maps: `cell` receives the (i, j) grid coordinates (and the sigma
+    # scalar-prefetch ref when scrambling); (p, q) is the standard block the
+    # cell computes — equal to (i, j) unless the output is scrambled, in which
+    # case it is one SMEM table lookup (host-precomputed, DESIGN.md §2).
     if scramble_out:
-        if nm != nn:
-            raise ValueError(f"scramble_out needs square block grid, got {nm}x{nn}")
+        g = nm
 
-        # Cell (i, j) computes standard block (p, q) = sigma(i, j): reads A
-        # row-block p and B col-block q, writes at cell (i, j).  The output
-        # permutation is pure index_map arithmetic (evaluated on the scalar
-        # core) — zero extra data movement.
-        def a_map(i, j, k):
-            p, _ = sigma_traced(nm, i, j)
-            return p, _stagger(i, j, k, nk) if stagger else k
-
-        def b_map(i, j, k):
-            _, q = sigma_traced(nm, i, j)
-            return _stagger(i, j, k, nk) if stagger else k, q
+        def pq(i, j, sig_ref):
+            flat = sig_ref[i * g + j]
+            return flat // g, flat % g
 
     else:
 
-        def a_map(i, j, k):
-            return i, _stagger(i, j, k, nk) if stagger else k
+        def pq(i, j, sig_ref):
+            del sig_ref
+            return i, j
 
-        def b_map(i, j, k):
-            return _stagger(i, j, k, nk) if stagger else k, j
+    def with_batch(f):
+        """Lift a (i, j, k, [sig]) map to the batched grid (b, i, j, k, [sig])."""
+        if not batched:
+            return f
+        return lambda bi, i, j, k, *sig: (bi,) + tuple(f(i, j, k, *sig))
 
-    def o_map(i, j, k):
+    def a_map(i, j, k, *sig):
+        p, _ = pq(i, j, sig[0] if sig else None)
+        return p, kk_of(i, j, k)
+
+    def b_map(i, j, k, *sig):
+        _, q = pq(i, j, sig[0] if sig else None)
+        return kk_of(i, j, k), q
+
+    def bias_map(i, j, k, *sig):
+        _, q = pq(i, j, sig[0] if sig else None)
+        return 0, q
+
+    def res_map(i, j, k, *sig):
+        return pq(i, j, sig[0] if sig else None)
+
+    def o_map(i, j, k, *sig):
         return i, j
+
+    lead = (1,) if batched else ()
+
+    in_specs = [
+        pl.BlockSpec(lead + (block_m, block_k), with_batch(a_map)),
+        pl.BlockSpec(lead + (block_k, block_n), with_batch(b_map)),
+    ]
+    operands = [a, b]
+    if bias is not None:
+        # bias is shared across the batch: keep its BlockSpec 2D everywhere.
+        if batched:
+            bias_spec = pl.BlockSpec(
+                (1, block_n), lambda bi, i, j, k, *sig: bias_map(i, j, k, *sig)
+            )
+        else:
+            bias_spec = pl.BlockSpec((1, block_n), bias_map)
+        in_specs.append(bias_spec)
+        operands.append(bias.reshape(1, n))
+    if residual is not None:
+        in_specs.append(
+            pl.BlockSpec(lead + (block_m, block_n), with_batch(res_map))
+        )
+        operands.append(residual)
+
+    out_spec = pl.BlockSpec(lead + (block_m, block_n), with_batch(o_map))
+    out_shape = jax.ShapeDtypeStruct(
+        ((n_batch, m, n) if batched else (m, n)), out_dtype
+    )
 
     scratch = (
         [pltpu.VMEM((block_m, block_n), jnp.float32)]
@@ -154,19 +283,158 @@ def mesh_matmul_pallas(
     compiler_params = None
     if _HAVE_PLTPU and not interpret:  # pragma: no cover — TPU-only path
         compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            dimension_semantics=("parallel",) * k_axis + ("arbitrary",),
         )
 
+    kernel = _make_kernel(
+        nk=nk,
+        k_axis=k_axis,
+        activation=activation,
+        has_bias=bias is not None,
+        has_residual=residual is not None,
+        has_sigma=scramble_out,
+        batched=batched,
+    )
+
+    if scramble_out:
+        sigma = jnp.asarray(sigma_block_table(nm))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_spec,
+            scratch_shapes=scratch,
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            compiler_params=compiler_params,
+            interpret=interpret,
+        )(sigma, *operands)
+
     return pl.pallas_call(
-        functools.partial(_matmul_kernel, nk=nk),
-        grid=(nm, nn, nk),
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), a_map),
-            pl.BlockSpec((block_k, block_n), b_map),
-        ],
-        out_specs=pl.BlockSpec((block_m, block_n), o_map),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
         scratch_shapes=scratch,
         compiler_params=compiler_params,
         interpret=interpret,
-    )(a, b)
+    )(*operands)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block_m",
+        "block_n",
+        "block_k",
+        "stagger",
+        "scramble_out",
+        "activation",
+        "out_dtype",
+        "interpret",
+    ),
+)
+def mesh_matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    stagger: bool = True,
+    scramble_out: bool = False,
+    activation: Optional[str] = None,
+    out_dtype: Optional[jnp.dtype] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = epilogue(A @ B) on the mesh-array schedule.
+
+    Args:
+      a: (M, K);  b: (K, N).  M, N, K must divide by the block shape (the
+        `ops.matmul` wrapper pads arbitrary shapes).
+      bias: optional (N,), added to the f32 accumulator before `activation`.
+      residual: optional (M, N), added after `activation` (DESIGN.md §3:
+        y = act(AB + bias) + residual).
+      stagger: rotate each tile's k-loop by (i + j) mod nk (the paper's
+        no-padding feeding).  False gives the standard k-ordered schedule —
+        kept selectable so benchmarks can compare the two schedules.
+      scramble_out: land the output in the paper's scrambled block
+        arrangement (requires a square output block grid); the epilogue is
+        applied to the *standard* block before placement.
+      activation: one of ACTIVATIONS (None | relu | silu | sigmoid | tanh |
+        gelu), applied in the k == nk-1 flush.
+      interpret: run the kernel body in Python on CPU (validation mode).
+    """
+    return _pallas_matmul(
+        a,
+        b,
+        bias,
+        residual,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        stagger=stagger,
+        scramble_out=scramble_out,
+        activation=activation,
+        out_dtype=out_dtype,
+        interpret=interpret,
+        batched=False,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block_m",
+        "block_n",
+        "block_k",
+        "stagger",
+        "scramble_out",
+        "activation",
+        "out_dtype",
+        "interpret",
+    ),
+)
+def mesh_matmul_pallas_batched(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    stagger: bool = True,
+    scramble_out: bool = False,
+    activation: Optional[str] = None,
+    out_dtype: Optional[jnp.dtype] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched C[b] = epilogue(A[b] @ B[b]) as ONE kernel with grid
+    (b, i, j, k) — replaces the per-element vmap launch in `ops.matmul`.
+
+    a: (B, M, K); b: (B, K, N); bias (N,) is shared across the batch;
+    residual: (B, M, N).  Semantics otherwise identical to
+    `mesh_matmul_pallas` per batch element.
+    """
+    return _pallas_matmul(
+        a,
+        b,
+        bias,
+        residual,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        stagger=stagger,
+        scramble_out=scramble_out,
+        activation=activation,
+        out_dtype=out_dtype,
+        interpret=interpret,
+        batched=True,
+    )

@@ -12,7 +12,17 @@ GEMM backend:
                          BlockSpec (square block grids only)
 
 The wrapper pads arbitrary shapes up to block multiples, folds leading batch
-dims, and on CPU runs Pallas in interpret mode automatically (TPU compiles).
+dims (fully-batched operands compile to ONE `pallas_call` with a (b, i, j, k)
+grid — no per-element vmap launch), and on CPU runs Pallas in interpret mode
+automatically (TPU compiles).
+
+Block shapes: explicit `block_m/n/k` are honored as given; any left as None
+are resolved through `kernels/autotune.py` (persistent per-shape cache; a hit
+never searches).  The fused epilogue (bias + activation + residual — the
+contract is y = act(AB + bias) + residual, DESIGN.md §3) is available on
+every backend so `models/layers.dense` can call one API; on the Pallas
+backends it executes inside the kernel's final-k flush.
+
 A process-wide default backend can be installed with `set_default_backend`
 (used by configs' `use_mesh_kernel` flag).
 """
@@ -20,19 +30,49 @@ A process-wide default backend can be installed with `set_default_backend`
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as _autotune
 from repro.kernels import ref
-from repro.kernels.mesh_matmul import mesh_matmul_pallas
+from repro.kernels.mesh_matmul import (
+    ACTIVATIONS,
+    mesh_matmul_pallas,
+    mesh_matmul_pallas_batched,
+)
 from repro.kernels.scramble_kernel import scramble_blocks_pallas
 
-__all__ = ["matmul", "scramble_blocks", "set_default_backend", "get_default_backend"]
+__all__ = [
+    "apply_epilogue",
+    "get_default_backend",
+    "matmul",
+    "scramble_blocks",
+    "set_default_backend",
+]
 
 _DEFAULT_BACKEND = "xla"
 _VALID = ("xla", "pallas_mesh", "pallas_mesh_scrambled")
+
+# d/dz of each fused activation, as a function of the *pre-activation* z
+# (recomputed in the backward pass — remat, not an extra forward output).
+_ACT_GRADS = {
+    "relu": lambda z: (z > 0).astype(z.dtype),
+    "silu": lambda z: jax.nn.sigmoid(z) * (1 + z * (1 - jax.nn.sigmoid(z))),
+    "sigmoid": lambda z: jax.nn.sigmoid(z) * (1 - jax.nn.sigmoid(z)),
+    "tanh": lambda z: 1 - jnp.tanh(z) ** 2,
+    "gelu": lambda z: _gelu_grad(z),
+}
+
+
+def _gelu_grad(z):
+    """Analytic derivative of ACTIVATIONS['gelu'] (same GELU_C/GELU_A)."""
+    from repro.kernels.mesh_matmul import GELU_A, GELU_C
+
+    u = jnp.tanh(GELU_C * (z + GELU_A * z**3))
+    return 0.5 * (1 + u) + 0.5 * z * (1 - u**2) * GELU_C * (1 + 3 * GELU_A * z**2)
 
 
 def set_default_backend(backend: str) -> None:
@@ -60,59 +100,129 @@ def _pad_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-def _mm_impl(a2: jax.Array, b2: jax.Array, opts) -> jax.Array:
-    """2D mesh-kernel matmul with padding to block multiples."""
-    block_m, block_n, block_k, stagger, scramble, out_dtype, interpret = opts
-    m, _ = a2.shape
-    _, n = b2.shape
-    ap = _pad_to(_pad_to(a2, block_m, 0), block_k, 1)
-    bp = _pad_to(_pad_to(b2, block_k, 0), block_n, 1)
-    if scramble and (ap.shape[0] != m or bp.shape[1] != n):
+def apply_epilogue(
+    z: jax.Array,
+    bias: Optional[jax.Array],
+    activation: Optional[str],
+    residual: Optional[jax.Array],
+) -> jax.Array:
+    """The epilogue contract as plain jnp ops (f32 in, f32 out) — the single
+    unfused reference used by the XLA backend and the unfused A/B lever."""
+    if bias is not None:
+        z = z + bias.astype(jnp.float32)
+    if activation not in (None, "none"):
+        z = ACTIVATIONS[activation](z)
+    if residual is not None:
+        z = z + residual.astype(jnp.float32)
+    return z
+
+
+def _act_grad(z: jax.Array, activation: str) -> jax.Array:
+    fn = _ACT_GRADS[activation]
+    return fn(z)
+
+
+def _mm_impl(a2, b2, bias, residual, opts) -> jax.Array:
+    """Mesh-kernel matmul (2D or fully-batched 3D) with padding to block
+    multiples and the fused epilogue."""
+    block_m, block_n, block_k, stagger, scramble, out_dtype, interpret, act = opts
+    batched = a2.ndim == 3
+    m, n = a2.shape[-2], b2.shape[-1]
+    ap = _pad_to(_pad_to(a2, block_m, -2), block_k, -1)
+    bp = _pad_to(_pad_to(b2, block_k, -2), block_n, -1)
+    if scramble and (ap.shape[-2] != m or bp.shape[-1] != n):
         raise ValueError(
             "pallas_mesh_scrambled requires block-aligned M and N "
             f"(got M={m}, N={n} with blocks {block_m}x{block_n})"
         )
-    out = mesh_matmul_pallas(
+    bias_p = None if bias is None else _pad_to(bias, block_n, 0)
+    res_p = (
+        None
+        if residual is None
+        else _pad_to(_pad_to(residual, block_m, -2), block_n, -1)
+    )
+    kernel = mesh_matmul_pallas_batched if batched else mesh_matmul_pallas
+    out = kernel(
         ap,
         bp,
+        bias=bias_p,
+        residual=res_p,
         block_m=block_m,
         block_n=block_n,
         block_k=block_k,
         stagger=stagger,
         scramble_out=scramble,
+        activation=act,
         out_dtype=out_dtype,
         interpret=interpret,
     )
-    return out[:m, :n]
+    return out[..., :m, :n]
 
 
-# pallas_call has no JVP rule, so training graphs need an explicit VJP:
-# the backward of C = A @ B is two more mesh-kernel matmuls
-# (dA = g Bᵀ, dB = Aᵀ g); for the scrambled backend C = S(AB), the cotangent
-# is unscrambled (a pure gather — the permutation's own transpose) first.
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _mm(a2: jax.Array, b2: jax.Array, opts) -> jax.Array:
-    return _mm_impl(a2, b2, opts)
+# pallas_call has no JVP rule, so training graphs need an explicit VJP.
+# Forward: y = act(A @ B + bias) + residual (epilogue fused in-kernel).
+# Backward: dresidual = g; dz = g * act'(z) with z recomputed by one plain
+# kernel call (remat — no extra forward output); dA = dz Bᵀ and dB = Aᵀ dz are
+# two more mesh-kernel matmuls; dbias reduces dz over rows.  For the scrambled
+# backend C = S(...), the cotangent is unscrambled (a pure gather — the
+# permutation's own transpose) first, putting the whole backward in standard
+# arrangement.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _mm(a2, b2, bias, residual, opts) -> jax.Array:
+    return _mm_impl(a2, b2, bias, residual, opts)
 
 
-def _mm_fwd(a2, b2, opts):
-    return _mm_impl(a2, b2, opts), (a2, b2)
+def _mm_fwd(a2, b2, bias, residual, opts):
+    # dresidual only needs residual's DTYPE — save a scalar sentinel, not the
+    # full output-sized tensor (it would stay live until the backward pass).
+    res_sentinel = None if residual is None else jnp.zeros((), residual.dtype)
+    return _mm_impl(a2, b2, bias, residual, opts), (a2, b2, bias, res_sentinel)
 
 
 def _mm_bwd(opts, res, g):
-    a2, b2 = res
-    block_m, block_n, block_k, stagger, scramble, _, interpret = opts
+    a2, b2, bias, res_sentinel = res
+    block_m, block_n, block_k, stagger, scramble, _, interpret, act = opts
     if scramble:
         g = ref.unscramble_blocks_ref(g, block_m=block_m, block_n=block_n)
     gf = g.astype(jnp.float32)
-    opts_a = (block_m, block_k, block_n, stagger, False, jnp.float32, interpret)
-    opts_b = (block_k, block_n, block_m, stagger, False, jnp.float32, interpret)
-    da = _mm(gf, b2.T.astype(jnp.float32), opts_a)
-    db = _mm(a2.T.astype(jnp.float32), gf, opts_b)
-    return da.astype(a2.dtype), db.astype(b2.dtype)
+    dresidual = None if res_sentinel is None else g.astype(res_sentinel.dtype)
+
+    if act in (None, "none"):
+        dz = gf
+    else:
+        # Remat the pre-activation z = A @ B + bias with a plain (no-epilogue,
+        # unscrambled) kernel call, then chain through act'.
+        opts_z = (block_m, block_n, block_k, stagger, False, jnp.float32, interpret, None)
+        z = _mm_impl(
+            a2.astype(jnp.float32), b2.astype(jnp.float32), None, None, opts_z
+        )
+        if bias is not None:
+            z = z + bias.astype(jnp.float32)
+        dz = gf * _act_grad(z, act)
+
+    opts_a = (block_m, block_k, block_n, stagger, False, jnp.float32, interpret, None)
+    opts_b = (block_k, block_n, block_m, stagger, False, jnp.float32, interpret, None)
+    bT = jnp.swapaxes(b2, -1, -2).astype(jnp.float32)
+    aT = jnp.swapaxes(a2, -1, -2).astype(jnp.float32)
+    da = _mm(dz, bT, None, None, opts_a)
+    db = _mm(aT, dz, None, None, opts_b)
+    dbias = (
+        None
+        if bias is None
+        else jnp.sum(dz, axis=tuple(range(dz.ndim - 1))).astype(bias.dtype)
+    )
+    return da.astype(a2.dtype), db.astype(b2.dtype), dbias, dresidual
 
 
 _mm.defvjp(_mm_fwd, _mm_bwd)
+
+
+def _resolve_blocks(block_m, block_n, block_k, m, k, n, dtype, backend):
+    """Fill any block sizes not explicitly passed from the autotune cache."""
+    if block_m is not None and block_n is not None and block_k is not None:
+        return block_m, block_n, block_k
+    bm, bn, bk = _autotune.resolve_blocks(m, k, n, dtype, backend)
+    return block_m or bm, block_n or bn, block_k or bk
 
 
 def matmul(
@@ -120,42 +230,79 @@ def matmul(
     b: jax.Array,
     *,
     backend: Optional[str] = None,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 128,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
     stagger: bool = True,
     out_dtype=None,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    residual: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """General matmul over the trailing two dims: (..., M, K) @ (K, N) or
-    batched (..., M, K) @ (..., K, N)."""
+    """General fused matmul over the trailing two dims: (..., M, K) @ (K, N)
+    or batched (..., M, K) @ (..., K, N).
+
+    Epilogue contract (all backends): y = act(a @ b + bias) + residual, with
+    the accumulation and epilogue in float32, cast to out_dtype at the end.
+    bias is (N,); residual matches the output shape.  Block sizes left as
+    None are resolved via `kernels/autotune.py` (cache hit => no search).
+    """
     backend = backend or _DEFAULT_BACKEND
     if backend not in _VALID:
         raise ValueError(f"backend must be one of {_VALID}, got {backend!r}")
+    if activation not in ACTIVATIONS:  # same error on every backend
+        raise ValueError(
+            f"activation must be one of {sorted(k for k in ACTIVATIONS if k)},"
+            f" got {activation!r}"
+        )
     out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
 
     if backend == "xla":
-        return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+        z = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+        return apply_epilogue(z, bias, activation, residual).astype(out_dtype)
 
     scramble = backend == "pallas_mesh_scrambled"
-    opts = (block_m, block_n, block_k, stagger, scramble, jnp.dtype(out_dtype), not _on_tpu())
-
-    def one(a2: jax.Array, b2: jax.Array) -> jax.Array:
-        return _mm(a2, b2, opts)
+    # Effective M for tuning: leading batch dims of `a` fold into M when `b`
+    # is 2D; fully-batched calls tune the per-element (M, K, N) GEMM.
+    eff_m = math.prod(a.shape[:-1]) if b.ndim == 2 else a.shape[-2]
+    block_m, block_n, block_k = _resolve_blocks(
+        block_m,
+        block_n,
+        block_k,
+        eff_m,
+        a.shape[-1],
+        b.shape[-1],
+        jnp.result_type(a.dtype, b.dtype),
+        backend,
+    )
+    opts = (
+        block_m,
+        block_n,
+        block_k,
+        stagger,
+        scramble,
+        jnp.dtype(out_dtype),
+        not _on_tpu(),
+        None if activation in (None, "none") else activation,
+    )
 
     if a.ndim == 2 and b.ndim == 2:
-        return one(a, b)
-    # Fold leading batch dims of `a`; broadcast or batch `b`.
+        return _mm(a, b, bias, residual, opts)
     if b.ndim == 2:
+        # Fold leading batch dims of `a` into M — still a single 2D kernel.
         lead = a.shape[:-2]
-        out = one(a.reshape(-1, a.shape[-1]) if a.ndim > 2 else a, b)
-        return out.reshape(*lead, a.shape[-2], b.shape[-1]) if a.ndim > 2 else out
-    # Fully batched: vmap over shared leading dims.
+        a2 = a.reshape(-1, a.shape[-1])
+        res2 = None if residual is None else residual.reshape(-1, residual.shape[-1])
+        out = _mm(a2, b, bias, res2, opts)
+        return out.reshape(*lead, a.shape[-2], b.shape[-1])
+    # Fully batched: ONE pallas_call with grid (b, i, j, k).
     if a.shape[:-2] != b.shape[:-2]:
         raise ValueError(f"batch dims mismatch: {a.shape} vs {b.shape}")
     lead = a.shape[:-2]
     af = a.reshape(-1, *a.shape[-2:])
     bf = b.reshape(-1, *b.shape[-2:])
-    out = jax.vmap(one)(af, bf)
+    resf = None if residual is None else residual.reshape(-1, *residual.shape[-2:])
+    out = _mm(af, bf, bias, resf, opts)
     return out.reshape(*lead, *out.shape[-2:])
 
 

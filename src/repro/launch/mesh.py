@@ -8,11 +8,25 @@ devices via XLA_FLAGS before first jax init, while tests/benches must see 1.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes AxisType; 0.4.x builds (e.g. 0.4.37) do not.
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover — version-dependent
+    AxisType = None
 
 __all__ = ["make_production_mesh", "make_local_mesh", "PROD_TP"]
 
 PROD_TP = 16  # 'model' axis size on the production meshes
+
+
+def _make_mesh(shape, axes):
+    """jax.make_mesh with axis_types when the installed jax supports it."""
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,9 +38,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(shape, axes):
     """Small mesh over whatever devices exist (tests / CPU examples)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

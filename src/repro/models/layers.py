@@ -120,17 +120,61 @@ def padded_vocab(cfg) -> int:
     return ((cfg.vocab_size + m - 1) // m) * m
 
 
-def gemm(x: jax.Array, w: jax.Array, cfg) -> jax.Array:
-    """Config-routed GEMM: XLA dot under pjit, Pallas mesh kernel if selected."""
+def gemm(
+    x: jax.Array,
+    w: jax.Array,
+    cfg,
+    *,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    residual: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Config-routed GEMM: XLA dot under pjit, Pallas mesh kernel if selected.
+
+    The epilogue (y = act(xW + bias) + residual) rides along: fused into the
+    kernel's final-k flush on the Pallas path (cfg.fused_dense_epilogue, the
+    A/B lever), applied as plain jnp ops otherwise — one call site, identical
+    semantics either way.  Block shapes come from cfg.mesh_block_m/n/k when
+    set (> 0); otherwise `kernels/autotune.py` resolves them per GEMM shape.
+    """
     backend = "pallas_mesh" if getattr(cfg, "use_mesh_kernel", False) else "xla"
-    return _matmul(x, w, backend=backend, out_dtype=x.dtype)
+    blocks = {
+        name: size
+        for name, size in (
+            ("block_m", getattr(cfg, "mesh_block_m", 0)),
+            ("block_n", getattr(cfg, "mesh_block_n", 0)),
+            ("block_k", getattr(cfg, "mesh_block_k", 0)),
+        )
+        if size
+    }
+    if backend != "xla" and not getattr(cfg, "fused_dense_epilogue", True):
+        from repro.kernels.ops import apply_epilogue
+
+        z = _matmul(x, w, backend=backend, out_dtype=jnp.float32, **blocks)
+        return apply_epilogue(z, bias, activation, residual).astype(x.dtype)
+    return _matmul(
+        x,
+        w,
+        backend=backend,
+        out_dtype=x.dtype,
+        bias=bias,
+        activation=activation,
+        residual=residual,
+        **blocks,
+    )
 
 
-def dense(x: jax.Array, w: jax.Array, cfg, b: Optional[jax.Array] = None) -> jax.Array:
-    y = gemm(x, w, cfg)
-    if b is not None:
-        y = y + b.astype(y.dtype)
-    return y
+def dense(
+    x: jax.Array,
+    w: jax.Array,
+    cfg,
+    b: Optional[jax.Array] = None,
+    *,
+    activation: Optional[str] = None,
+    residual: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Dense projection with the fused epilogue: one kernel on the mesh path."""
+    return gemm(x, w, cfg, bias=b, activation=activation, residual=residual)
 
 
 def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:

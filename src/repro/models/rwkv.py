@@ -209,7 +209,7 @@ def _time_mix(p, x, cfg, ctx, state_wkv, x_last):
     r = gemm(xr, p["wr"].astype(x.dtype), cfg).reshape(b, t, h, hd).astype(jnp.float32)
     k = gemm(xk, p["wk"].astype(x.dtype), cfg).reshape(b, t, h, hd).astype(jnp.float32)
     v = gemm(xv, p["wv"].astype(x.dtype), cfg).reshape(b, t, h, hd).astype(jnp.float32)
-    g = jax.nn.silu(gemm(xg, p["wg"].astype(x.dtype), cfg))
+    g = gemm(xg, p["wg"].astype(x.dtype), cfg, activation="silu")
 
     # data-dependent decay w_t in (0, 1): exp(-exp(w0 + lora(xw)))
     dec = p["w0"].astype(jnp.float32) + jnp.einsum(
@@ -242,10 +242,10 @@ def _channel_mix(p, x, cfg, ctx, x_last):
     x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
     xk = x + (x_prev - x) * p["cm_mu_k"].astype(x.dtype)
     xr = x + (x_prev - x) * p["cm_mu_r"].astype(x.dtype)
-    kk = jnp.square(jax.nn.relu(gemm(xk, p["cm_wk"].astype(x.dtype), cfg)))
+    kk = jnp.square(gemm(xk, p["cm_wk"].astype(x.dtype), cfg, activation="relu"))
     kk = ctx.c(kk, ("batch", "seq", "mlp"))
     vv = gemm(kk, p["cm_wv"].astype(x.dtype), cfg)
-    rr = jax.nn.sigmoid(gemm(xr, p["cm_wr"].astype(x.dtype), cfg))
+    rr = gemm(xr, p["cm_wr"].astype(x.dtype), cfg, activation="sigmoid")
     return ctx.c(rr * vv, ("batch", "seq", "embed")), x[:, -1, :]
 
 

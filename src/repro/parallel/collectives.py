@@ -23,6 +23,18 @@ def _shift(p: int, by: int = 1):
     return [(s, (s - by) % p) for s in range(p)]
 
 
+def _axis_size(axis) -> int:
+    """Static named-axis size: jax >= 0.6 has jax.lax.axis_size; on 0.4.x
+    jax.core.axis_frame(name) returns the size directly."""
+    names = axis if isinstance(axis, (tuple, list)) else (axis,)
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(names)
+    size = 1
+    for name in names:
+        size *= jax.core.axis_frame(name)
+    return size
+
+
 def ring_allgather_matmul(x_blk: jax.Array, w: jax.Array, axis: str) -> jax.Array:
     """Computes all_gather(x, axis) @ w without materializing the gather.
 
@@ -30,7 +42,7 @@ def ring_allgather_matmul(x_blk: jax.Array, w: jax.Array, axis: str) -> jax.Arra
     w: replicated (k, n).  Returns the local (p*m_blk, n) result — i.e. the
     full product, built ring-step by ring-step while chunks circulate.
     """
-    p = jax.lax.axis_size(axis)
+    p = _axis_size(axis)
     idx = jax.lax.axis_index(axis)
     m_blk, n = x_blk.shape[0], w.shape[1]
     out = jnp.zeros((p * m_blk, n), dtype=jnp.promote_types(x_blk.dtype, jnp.float32))
@@ -53,7 +65,7 @@ def matmul_ring_reducescatter(x: jax.Array, w_blk: jax.Array, axis: str) -> jax.
     (m/p, n) slice of sum_k X_k @ W_k; the accumulator hop overlaps the next
     partial matmul.
     """
-    p = jax.lax.axis_size(axis)
+    p = _axis_size(axis)
     idx = jax.lax.axis_index(axis)
     m, n = x.shape[0], w_blk.shape[1]
     if m % p:
@@ -76,7 +88,7 @@ def matmul_ring_reducescatter(x: jax.Array, w_blk: jax.Array, axis: str) -> jax.
 def psum_if_multi(x: jax.Array, axis: str) -> jax.Array:
     """psum that is a no-op on a missing/size-1 axis (mesh-shape agnostic)."""
     try:
-        size = jax.lax.axis_size(axis)
+        size = _axis_size(axis)
     except NameError:
         return x
     return jax.lax.psum(x, axis) if size > 1 else x

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel.sharding import shard_map
+
 __all__ = ["pipeline_apply", "bubble_fraction"]
 
 
@@ -75,7 +77,7 @@ def pipeline_apply(
         jax.tree.map(lambda _: P(axis), stage_params),
         P(),
     )
-    mapped = jax.shard_map(
+    mapped = shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=P(), check_vma=False
     )
     return mapped(stage_params, x_micro)

@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.parallel.sharding import shard_map
+
 __all__ = ["systolic_matmul", "systolic_matmul_shardmap", "phase_counts"]
 
 
@@ -129,7 +131,7 @@ def _systolic_jit(a, b, mesh, axes, out_dtype):
     body = functools.partial(
         systolic_matmul_shardmap, axis_x=axis_x, axis_y=axis_y, p=p
     )
-    mapped = jax.shard_map(
+    mapped = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis_x, axis_y), P(axis_x, axis_y)),

@@ -26,6 +26,7 @@ from repro.models.layers import ShardCtx
 from repro.models.registry import Model
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.parallel.compression import compressed_pmean_tree, init_error_state
+from repro.parallel.sharding import shard_map
 
 __all__ = [
     "init_train_state",
@@ -158,7 +159,7 @@ def make_dp_train_step_compressed(
         opt_rep = jax.tree.map(lambda _: P(), state["opt"])
         err_spec = jax.tree.map(lambda _: P(dp_axes), state["err"])
         batch_spec = jax.tree.map(lambda _: P(dp_axes), batch)
-        mapped = jax.shard_map(
+        mapped = shard_map(
             body,
             mesh=mesh,
             in_specs=(pspec_rep, opt_rep, P(), err_spec, batch_spec),

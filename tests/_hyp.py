@@ -1,0 +1,86 @@
+"""Optional-hypothesis shim: property tests degrade gracefully without it.
+
+`hypothesis` is not part of the baked container image, so importing it at
+module scope broke collection of 7 test modules.  Test files import
+`given / settings / st` from here instead:
+
+  * hypothesis installed -> the real thing, unchanged semantics.
+  * hypothesis missing   -> a minimal deterministic fallback that runs each
+    property test over `max_examples` seeded pseudo-random samples drawn from
+    the same strategy shapes (integers / floats / booleans / sampled_from).
+    Weaker than real shrinking/coverage, but the properties still execute on
+    minimal environments instead of the whole module failing collection.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - trivially version-dependent
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            lo = -(2**16) if min_value is None else min_value
+            hi = 2**16 if max_value is None else max_value
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def floats(min_value=None, max_value=None, **_kw):
+            lo = -1e6 if min_value is None else min_value
+            hi = 1e6 if max_value is None else max_value
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    st = _Strategies()
+
+    def settings(max_examples=10, **_kw):
+        def deco(fn):
+            fn._shim_settings = {"max_examples": max_examples}
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — copying __wrapped__ would make pytest
+            # see the original signature and demand fixtures for drawn args.
+            def wrapper(*args, **kwargs):
+                cfg = getattr(wrapper, "_shim_settings", None) or getattr(
+                    fn, "_shim_settings", {}
+                )
+                n = cfg.get("max_examples", 10)
+                rng = _np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = [s.sample(rng) for s in arg_strategies]
+                    drawn_kw = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

@@ -16,5 +16,9 @@ def rng():
     return np.random.default_rng(0)
 
 
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running (subprocess compile) tests")
+
+
 def pytest_report_header(config):
     return f"jax {jax.__version__} devices={jax.devices()}"

@@ -8,11 +8,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.scramble import scramble_order
 from repro.kernels import ref
-from repro.kernels.mesh_matmul import mesh_matmul_pallas
+from repro.kernels.mesh_matmul import (
+    ACTIVATIONS,
+    mesh_matmul_pallas,
+    mesh_matmul_pallas_batched,
+)
 from repro.kernels.ops import matmul, scramble_blocks
 from repro.kernels.scramble_kernel import scramble_blocks_pallas
 
@@ -218,3 +222,200 @@ def test_scrambled_backend_equals_core_S():
     got = matmul(a, b, backend="pallas_mesh_scrambled", block_m=B, block_n=B, block_k=B)
     want = scramble_blocks_ref(ref.matmul_ref(a, b), block_m=B, block_n=B)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# --- fused epilogue -----------------------------------------------------------
+
+
+def _epilogue_ref(a, b, bias=None, activation=None, residual=None):
+    z = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if bias is not None:
+        z = z + bias.astype(jnp.float32)
+    if activation not in (None, "none"):
+        z = ACTIVATIONS[activation](z)
+    if residual is not None:
+        z = z + residual.astype(jnp.float32)
+    return z
+
+
+@pytest.mark.parametrize("activation", [None, "relu", "gelu", "silu", "sigmoid", "tanh"])
+@pytest.mark.parametrize("with_residual", [False, True])
+def test_fused_epilogue_vs_unfused_reference(activation, with_residual):
+    """acceptance: fused bias+activation matches unfused reference @ 1e-4."""
+    m, k, n = 2 * B, 3 * B, 2 * B
+    a = _mk((m, k), jnp.float32, 21)
+    b = _mk((k, n), jnp.float32, 22)
+    bias = _mk((n,), jnp.float32, 23)
+    res = _mk((m, n), jnp.float32, 24) if with_residual else None
+    got = mesh_matmul_pallas(
+        a, b, bias=bias, residual=res, activation=activation,
+        block_m=B, block_n=B, block_k=B, interpret=True,
+    )
+    want = _epilogue_ref(a, b, bias, activation, res)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_fused_epilogue_scrambled_applies_before_placement():
+    """epilogue acts on the standard block, then sigma places it."""
+    g = 3
+    m = n = g * B
+    a = _mk((m, 2 * B), jnp.float32, 25)
+    b = _mk((2 * B, n), jnp.float32, 26)
+    bias = _mk((n,), jnp.float32, 27)
+    got = mesh_matmul_pallas(
+        a, b, bias=bias, activation="relu", scramble_out=True,
+        block_m=B, block_n=B, block_k=B, interpret=True,
+    )
+    want = ref.scramble_blocks_ref(
+        _epilogue_ref(a, b, bias, "relu"), block_m=B, block_n=B
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_fused_epilogue_rejects_bad_shapes():
+    a = jnp.zeros((2 * B, B))
+    b = jnp.zeros((B, 2 * B))
+    with pytest.raises(ValueError):
+        mesh_matmul_pallas(
+            a, b, bias=jnp.zeros((B,)),  # wrong bias length
+            block_m=B, block_n=B, block_k=B, interpret=True,
+        )
+    with pytest.raises(ValueError):
+        mesh_matmul_pallas(
+            a, b, activation="swish-ish",  # unknown activation
+            block_m=B, block_n=B, block_k=B, interpret=True,
+        )
+
+
+def test_ops_fused_epilogue_with_padding():
+    """Fused path through ops.matmul on non-block-multiple shapes."""
+    rng = np.random.default_rng(31)
+    a = jnp.asarray(rng.normal(size=(19, 13)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(13, 11)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(11,)).astype(np.float32))
+    got = matmul(
+        a, b, backend="pallas_mesh", block_m=B, block_n=B, block_k=B,
+        bias=bias, activation="gelu",
+    )
+    want = _epilogue_ref(a, b, bias, "gelu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("activation", ["relu", "gelu", "silu", "sigmoid", "tanh"])
+def test_fused_epilogue_grads_match_xla(activation):
+    """Extended VJP: grads of act(AB + bias) + residual == XLA-backend grads."""
+    rng = np.random.default_rng(32)
+    a = jnp.asarray(rng.normal(size=(2 * B, 3 * B)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(3 * B, B)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(B,)).astype(np.float32))
+    res = jnp.asarray(rng.normal(size=(2 * B, B)).astype(np.float32))
+
+    def loss(backend):
+        def f(a, b, bias, res):
+            y = matmul(
+                a, b, backend=backend, block_m=B, block_n=B, block_k=B,
+                bias=bias, activation=activation, residual=res,
+            )
+            return jnp.sum(y**2)
+        return f
+
+    gx = jax.grad(loss("xla"), argnums=(0, 1, 2, 3))(a, b, bias, res)
+    gp = jax.grad(loss("pallas_mesh"), argnums=(0, 1, 2, 3))(a, b, bias, res)
+    for want, got in zip(gx, gp):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_fused_epilogue_grads_scrambled_backend():
+    rng = np.random.default_rng(33)
+    g = 3
+    a = jnp.asarray(rng.normal(size=(g * B, 2 * B)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(2 * B, g * B)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(g * B,)).astype(np.float32))
+
+    def f_scr(a, b, bias):
+        y = matmul(
+            a, b, backend="pallas_mesh_scrambled", block_m=B, block_n=B,
+            block_k=B, bias=bias, activation="silu",
+        )
+        return jnp.sum(y**2)
+
+    def f_xla(a, b, bias):
+        return jnp.sum(matmul(a, b, backend="xla", bias=bias, activation="silu") ** 2)
+
+    gs = jax.grad(f_scr, argnums=(0, 1, 2))(a, b, bias)
+    gx = jax.grad(f_xla, argnums=(0, 1, 2))(a, b, bias)
+    # sum-of-squares is permutation-invariant, so grads agree exactly
+    for want, got in zip(gx, gs):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+
+
+# --- batched (b, i, j, k) grid ------------------------------------------------
+
+
+def test_batched_kernel_vs_oracle():
+    nb = 4
+    a = _mk((nb, 2 * B, 3 * B), jnp.float32, 41)
+    b = _mk((nb, 3 * B, 2 * B), jnp.float32, 42)
+    got = mesh_matmul_pallas_batched(
+        a, b, block_m=B, block_n=B, block_k=B, interpret=True
+    )
+    want = jnp.einsum("bmk,bkn->bmn", a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_batched_kernel_fused_epilogue():
+    nb = 3
+    a = _mk((nb, 2 * B, B), jnp.float32, 43)
+    b = _mk((nb, B, 2 * B), jnp.float32, 44)
+    bias = _mk((2 * B,), jnp.float32, 45)  # shared across the batch
+    res = _mk((nb, 2 * B, 2 * B), jnp.float32, 46)
+    got = mesh_matmul_pallas_batched(
+        a, b, bias=bias, residual=res, activation="silu",
+        block_m=B, block_n=B, block_k=B, interpret=True,
+    )
+    want = jax.vmap(lambda ai, bi, ri: _epilogue_ref(ai, bi, bias, "silu", ri))(a, b, res)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_ops_batched_is_single_pallas_call():
+    """acceptance: batched inputs trace to ONE pallas_call with a (b,i,j,k)
+    grid — no vmapped per-element launch."""
+    import re
+
+    a = _mk((4, 2 * B, B), jnp.float32, 47)
+    b = _mk((4, B, B), jnp.float32, 48)
+    jaxpr = str(
+        jax.make_jaxpr(
+            lambda a, b: matmul(a, b, backend="pallas_mesh", block_m=B, block_n=B, block_k=B)
+        )(a, b)
+    )
+    assert len([ln for ln in jaxpr.splitlines() if "pallas_call" in ln]) == 1
+    grids = re.findall(r"grid=\(([^)]*)\)", jaxpr)
+    assert grids and len(grids[0].split(",")) == 4, grids  # (b, i, j, k)
+    assert grids[0].split(",")[0].strip() == "4"  # leading batch axis
+
+
+def test_batched_grads_match_xla():
+    a = _mk((3, 2 * B, B), jnp.float32, 49)
+    b = _mk((3, B, 2 * B), jnp.float32, 50)
+    bias = _mk((2 * B,), jnp.float32, 51)
+
+    def loss(backend):
+        def f(a, b, bias):
+            y = matmul(
+                a, b, backend=backend, block_m=B, block_n=B, block_k=B,
+                bias=bias, activation="gelu",
+            )
+            return jnp.sum(y**2)
+        return f
+
+    gx = jax.grad(loss("xla"), argnums=(0, 1, 2))(a, b, bias)
+    gp = jax.grad(loss("pallas_mesh"), argnums=(0, 1, 2))(a, b, bias)
+    for want, got in zip(gx, gp):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )

@@ -154,18 +154,19 @@ def test_ring_collective_matmuls_4dev():
         from jax.sharding import PartitionSpec as P
         from repro.launch.mesh import make_local_mesh
         from repro.parallel.collectives import ring_allgather_matmul, matmul_ring_reducescatter
+        from repro.parallel.sharding import shard_map
         mesh = make_local_mesh((4,), ("model",))
         rng = np.random.default_rng(1)
         x = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
         w = jnp.asarray(rng.normal(size=(8, 12)).astype(np.float32))
         # ring all-gather matmul: X row-sharded, W replicated
-        f = jax.shard_map(
+        f = shard_map(
             lambda xb, wb: ring_allgather_matmul(xb, wb, "model"),
             mesh=mesh, in_specs=(P("model", None), P()), out_specs=P(), check_vma=False,
         )
         np.testing.assert_allclose(np.asarray(f(x, w))[:16], np.asarray(x @ w), rtol=1e-4, atol=1e-4)
         # matmul + ring reduce-scatter: X col-sharded, W row-sharded
-        g = jax.shard_map(
+        g = shard_map(
             lambda xb, wb: matmul_ring_reducescatter(xb, wb, "model"),
             mesh=mesh, in_specs=(P(None, "model"), P("model", None)), out_specs=P("model", None), check_vma=False,
         )
@@ -184,11 +185,12 @@ def test_compressed_allreduce_4dev():
         from jax.sharding import PartitionSpec as P
         from repro.launch.mesh import make_local_mesh
         from repro.parallel.compression import compressed_psum_mean, init_error_state
+        from repro.parallel.sharding import shard_map
         mesh = make_local_mesh((4,), ("data",))
         rng = np.random.default_rng(2)
         g = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))  # per-dev rows
         e = jnp.zeros((4, 64), jnp.float32)
-        f = jax.shard_map(
+        f = shard_map(
             lambda gb, eb: compressed_psum_mean(gb[0], eb[0], ("data",)),
             mesh=mesh, in_specs=(P("data", None), P("data", None)),
             out_specs=(P(), P("data")), check_vma=False,
