@@ -1,0 +1,98 @@
+"""Dispatch-overhead microbench: eager `ops.matmul` vs a pre-built Plan.
+
+The plan/execute split exists so serving pays backend resolution, capability
+validation, autotune lookup, and spec construction ONCE — this section
+measures what that saves per call.  Three variants over the same GEMM:
+
+  eager     ops.matmul(a, b) each call — the legacy shim path (builds a
+            GemmSpec + Epilogue, consults the plan cache, validates, executes)
+  plan_hit  api.plan(spec) each call + execute — spec hashing + cache lookup
+            per call, no rebuild
+  planned   one Plan built up front, called directly — the serving hot path
+  raw       plan.executor called directly — no per-call Python validation
+            (the floor: pure jitted-dispatch latency)
+
+plus the amortized-away cost itself:
+
+  plan_build_cold   api.plan on an empty cache (capability validation +
+                    executor construction; kernel compile happens on first
+                    call, not here)
+
+The GEMM is tiny (64³) and every call synchronizes, so rows differ by Python
+dispatch work, not kernel time.  `run(as_dict=True)` returns a JSON-able
+payload merged into BENCH_kernels.json by `benchmarks/run.py --json`,
+tracking the plan-cache win across PRs.
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import api
+from repro.kernels.ops import matmul
+
+M = K = N = 64
+ITERS = 300
+
+
+def _time_per_call(fn, iters=ITERS):
+    for _ in range(3):  # warm: trace/compile + prime the plan cache
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn().block_until_ready()  # sync per call: steady-state latency
+    return (time.perf_counter() - t0) / iters * 1e6  # µs
+
+
+def run(as_dict=False):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    spec = api.GemmSpec.from_operands(a, b)
+    plan = api.plan(spec)
+
+    rows = {
+        "eager_matmul": _time_per_call(lambda: matmul(a, b)),
+        "plan_cache_hit": _time_per_call(lambda: api.plan(spec)(a, b)),
+        "prebuilt_plan": _time_per_call(lambda: plan(a, b)),
+        "raw_executor": _time_per_call(lambda: plan.executor(a, b, None, None)),
+    }
+
+    def _build_cold():
+        # snapshot + restore the whole cache/stats around the cold build so
+        # plans made by other sections (and the process-wide hit/miss
+        # telemetry) survive the measurement unchanged
+        saved_cache = dict(api._PLAN_CACHE)
+        saved_stats = dict(api._PLAN_STATS)
+        api._PLAN_CACHE.clear()
+        t0 = time.perf_counter()
+        api.plan(spec)
+        dt = time.perf_counter() - t0
+        api._PLAN_CACHE.clear()
+        api._PLAN_CACHE.update(saved_cache)
+        api._PLAN_STATS.update(saved_stats)
+        return dt
+
+    _build_cold()  # warm autotune/module state
+    rows["plan_build_cold"] = sum(_build_cold() for _ in range(20)) / 20 * 1e6
+
+    print("# dispatch overhead: eager ops.matmul vs pre-built Plan "
+          f"({M}x{K}x{N} f32, backend={plan.backend})")
+    print("path,us_per_call")
+    for name, us in rows.items():
+        print(f"{name},{us:.1f}")
+    speedup = rows["eager_matmul"] / max(rows["prebuilt_plan"], 1e-9)
+    print(f"plan_speedup,{speedup:.2f}x")
+
+    result = {
+        "mkn": f"{M}x{K}x{N}",
+        "backend": plan.backend,
+        "us_per_call": {k: round(v, 2) for k, v in rows.items()},
+        "plan_speedup": round(speedup, 2),
+    }
+    return result if as_dict else rows
+
+
+if __name__ == "__main__":
+    run()

@@ -15,11 +15,10 @@ trajectory is tracked across PRs.
 
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import autotune
+from repro.kernels import api, autotune
 from repro.kernels.ref import matmul_ref
 
 
@@ -69,18 +68,21 @@ def run(csv=False, as_dict=False):
     for r in result["structure"]:
         print(",".join(str(r[key]) for key in header))
 
-    print("\n# XLA GEMM wall-time on this host (scale context only)")
+    print("\n# XLA GEMM wall-time on this host (scale context only; plan/execute)")
     print("mkn,dtype,ms,gflops")
     rng = np.random.default_rng(0)
     for m, k, n in ((512, 512, 512), (1024, 1024, 1024), (2048, 2048, 2048)):
         a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
         b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
-        f = jax.jit(matmul_ref)
-        f(a, b).block_until_ready()
+        # planned once per shape; the loop times the RAW jitted executor so
+        # the series stays comparable with pre-plan-API numbers (per-call
+        # validation overhead is measured separately by the dispatch bench)
+        f = api.plan(api.GemmSpec.from_operands(a, b), backend="xla").executor
+        f(a, b, None, None).block_until_ready()
         t0 = time.perf_counter()
         iters = 10
         for _ in range(iters):
-            out = f(a, b)
+            out = f(a, b, None, None)
         out.block_until_ready()
         dt = (time.perf_counter() - t0) / iters
         print(f"{m}x{k}x{n},f32,{dt*1e3:.2f},{2*m*k*n/dt/1e9:.1f}")

@@ -7,6 +7,7 @@ Sections:
   scramble     cycle structure/orders (7/7/20 + extension) + S^k throughput
   symmetric    symmetric-product early readout (<= n+1+n/2)
   kernels      mesh-matmul BlockSpec structure + allclose gate + GEMM context
+  dispatch     plan/execute dispatch overhead (eager matmul vs pre-built Plan)
   distributed  Cannon phases, pipeline bubbles, ring-overlap wall-time
   train        short real training run (loss trajectory) on the demo config
   roofline     renders the dry-run roofline table (artifacts/pod16x16)
@@ -19,6 +20,7 @@ import time
 import traceback
 
 from benchmarks import (
+    bench_dispatch,
     bench_distributed,
     bench_kernels,
     bench_roofline,
@@ -53,6 +55,7 @@ SECTIONS = {
     "scramble": bench_scramble.run,
     "symmetric": bench_symmetric.run,
     "kernels": bench_kernels.run,
+    "dispatch": bench_dispatch.run,
     "distributed": bench_distributed.run,
     "train": bench_train,
     "roofline": bench_roofline.run,
@@ -92,6 +95,10 @@ def main() -> None:
     names = [args.only] if args.only else list(SECTIONS)
     if args.json and "kernels" not in names:
         names.append("kernels")
+    if args.json and "kernels" in names and "dispatch" in names:
+        # the kernels --json branch already runs the dispatch microbench for
+        # its payload — don't time the same ~1500 calls twice
+        names.remove("dispatch")
     failed = []
     for name in names:
         print(f"\n{'=' * 72}\n== bench: {name}\n{'=' * 72}")
@@ -99,6 +106,9 @@ def main() -> None:
         try:
             if name == "kernels" and args.json:
                 payload = bench_kernels.run(as_dict=True)
+                # dispatch-overhead microbench rides along in the same JSON so
+                # BENCH_kernels.json tracks the plan-cache win across PRs
+                payload["dispatch"] = bench_dispatch.run(as_dict=True)
                 _write_kernels_json(payload, time.perf_counter() - t0, args.json_path)
             else:
                 SECTIONS[name]()

@@ -56,3 +56,18 @@ from repro.kernels.ref import mesh_matmul_ref
 
 assert np.allclose(np.asarray(out), np.asarray(mesh_matmul_ref(a2, b2, block_m=B, block_n=B)), atol=1e-4)
 print("\nPallas mesh-matmul kernel (scrambled output) == oracle  ✓")
+
+# 6. the plan/execute operator API: describe the GEMM once (typed spec,
+#    including the paper regime via `structure`), plan once (backend chosen by
+#    capability, blocks autotuned, σ table precomputed host-side), execute
+#    per request via the cached jitted callable
+from repro.kernels import api
+
+spec = api.GemmSpec.from_operands(a2, b2, structure="scrambled",
+                                  blocks=(B, B, B))
+p = api.plan(spec)                      # picks a scramble-capable backend
+print(f"\nplanned: backend={p.backend} blocks={p.blocks} "
+      f"flops={p.flops:.2e} vmem={p.vmem_bytes}B")
+assert np.array_equal(np.asarray(p(a2, b2)), np.asarray(out))
+assert api.plan(spec) is p              # plan cache: same spec, same object
+print("plan/execute (structure='scrambled') == fused kernel, plan cached  ✓")

@@ -1,6 +1,11 @@
 """Batched serving demo: prefill + greedy decode across model families
 (dense KV cache, MoE, RWKV O(1) state, Zamba2 hybrid state).
 
+Every projection runs through the plan/execute API: the first trace of each
+family plans its GEMM shapes once, later requests (and repeat shapes across
+families) hit the process-wide plan cache — the report at the end shows one
+plan per (spec, backend) pair.
+
   PYTHONPATH=src python examples/serve_demo.py
 """
 
@@ -8,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.launch.serve import generate
+from repro.launch.serve import generate, report_plan_cache
 from repro.models import get_model
 
 for arch in ("qwen2-7b", "olmoe-1b-7b", "rwkv6-1.6b", "zamba2-1.2b"):
@@ -21,3 +26,5 @@ for arch in ("qwen2-7b", "olmoe-1b-7b", "rwkv6-1.6b", "zamba2-1.2b"):
     out, rate = generate(model, params, prompts, gen_len=8)
     print(f"{arch:16s} family={cfg.family:7s} generated {out.shape} "
           f"@ {rate:6.1f} steps/s — row0: {list(map(int, out[0]))}")
+
+report_plan_cache(prefix="[demo]")

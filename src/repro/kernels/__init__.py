@@ -1,15 +1,27 @@
-"""Pallas TPU kernels for the mesh-array technique + jit wrappers and oracles.
+"""Pallas TPU kernels for the mesh-array technique + the plan/execute API.
 
+api.py              plan/execute operator API: typed GemmSpec/Epilogue,
+                    capability-based backend registry (ref | xla |
+                    pallas_mesh), plan(spec) -> cached reusable executable
 mesh_matmul.py      staggered-k blocked matmul: fused scramble output, fused
                     bias/activation/residual epilogue, batched (b, i, j, k)
                     grid variant
 scramble_kernel.py  S^k as a scalar-prefetch block-permutation kernel
 autotune.py         block-shape autotuner: VMEM-budget candidate pruning,
                     timed/model search, versioned persistent cache
-ops.py              public dispatch (xla | pallas_mesh | pallas_mesh_scrambled)
+ops.py              legacy string-dispatch compat shim over api.py
 ref.py              pure-jnp oracles all kernels are tested against
 """
 
+from repro.kernels.api import (
+    BackendCapabilities,
+    Epilogue,
+    GemmSpec,
+    Plan,
+    default_backend,
+    plan,
+    register_backend,
+)
 from repro.kernels.ops import (
     get_default_backend,
     matmul,
@@ -17,4 +29,16 @@ from repro.kernels.ops import (
     set_default_backend,
 )
 
-__all__ = ["matmul", "scramble_blocks", "set_default_backend", "get_default_backend"]
+__all__ = [
+    "BackendCapabilities",
+    "Epilogue",
+    "GemmSpec",
+    "Plan",
+    "default_backend",
+    "get_default_backend",
+    "matmul",
+    "plan",
+    "register_backend",
+    "scramble_blocks",
+    "set_default_backend",
+]

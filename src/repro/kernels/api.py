@@ -1,0 +1,888 @@
+"""Plan/execute operator API: typed GEMM specs + capability-based backends.
+
+This module is the architectural seam between "what GEMM do I need?" and
+"which kernel runs it" (DESIGN.md §8).  It separates *planning* — resolve a
+backend against declared capabilities, fix block shapes through the autotuner,
+precompute the σ/stagger tables host-side — from *execution* — a cached,
+reusable, jitted callable that serving and training graphs invoke per request:
+
+    spec = GemmSpec.from_operands(a, b, epilogue=Epilogue(bias=True,
+                                                          activation="gelu"))
+    p = plan(spec)                  # validate + autotune + build, ONCE
+    y = p(a, b, bias=bias)          # reuse forever; p is cached per spec
+
+`GemmSpec.structure` replaces the old `pallas_mesh_scrambled` pseudo-backend:
+the *regime* the paper's array supports (general 2n-1-step product, the
+3n/2+1 symmetric readout, the scrambling mode) is a property of the problem,
+not of the kernel that happens to run it.  Backends declare which structures
+(and which other capabilities: fully-batched grids, fused epilogues,
+off-TPU interpret execution, autotuned blocks) they support via
+`register_backend`, so ref/XLA/Pallas implementations — and test doubles —
+register uniformly; `plan` picks a capable backend instead of string-matching.
+
+`repro.kernels.ops.matmul` remains as a thin compat shim over this module.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, FrozenSet, List, Mapping, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import autotune as _autotune
+from repro.kernels import ref
+from repro.kernels.mesh_matmul import (
+    ACTIVATIONS,
+    mesh_matmul_pallas,
+    mesh_matmul_pallas_batched,
+    sigma_block_table,
+)
+
+__all__ = [
+    "STRUCTURES",
+    "BackendCapabilities",
+    "CapabilityError",
+    "Epilogue",
+    "GemmSpec",
+    "Plan",
+    "apply_epilogue",
+    "backend_names",
+    "clear_plan_cache",
+    "default_backend",
+    "get_capabilities",
+    "get_default",
+    "plan",
+    "plan_cache_info",
+    "register_backend",
+    "set_default",
+    "unregister_backend",
+]
+
+STRUCTURES = ("general", "symmetric", "scrambled")
+
+
+# ---------------------------------------------------------------------------
+# Typed specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """The fused-epilogue contract (DESIGN.md §3): y = act(AB + bias) + residual.
+
+    Declares *which* epilogue operands exist — the arrays themselves are
+    execution-time inputs, so one plan serves every bias/residual value.
+    """
+
+    bias: bool = False
+    activation: Optional[str] = None
+    residual: bool = False
+
+    def __post_init__(self):
+        if self.activation not in ACTIVATIONS:
+            raise ValueError(
+                f"activation must be one of {sorted(k for k in ACTIVATIONS if k)},"
+                f" got {self.activation!r}"
+            )
+        if self.activation == "none":
+            object.__setattr__(self, "activation", None)
+
+    @property
+    def is_identity(self) -> bool:
+        return not (self.bias or self.residual) and self.activation is None
+
+
+def _dtype_name(dt) -> str:
+    return jnp.dtype(dt).name
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmSpec:
+    """Logical description of one GEMM: (batch..., M, K) @ (K, N) — or, when
+    `batched_b`, (batch..., M, K) @ (batch..., K, N).
+
+    `structure` names the paper regime of the product:
+      general    arbitrary C = AB (the 2n-1-step mode)
+      symmetric  caller asserts C = Cᵀ (square; the early-readout mode — keys
+                 a separate autotune-cache partition, sym1)
+      scrambled  output lands in the paper's σ block arrangement (replaces the
+                 old `pallas_mesh_scrambled` pseudo-backend)
+
+    `blocks` is an optional (bm, bn, bk) override; entries left None are
+    resolved by the autotuner at plan time.  Hashable and frozen — specs are
+    the plan-cache key.
+    """
+
+    m: int
+    k: int
+    n: int
+    batch: Tuple[int, ...] = ()
+    batched_b: bool = False
+    dtype_a: str = "float32"
+    dtype_b: str = "float32"
+    out_dtype: Optional[str] = None
+    structure: str = "general"
+    epilogue: Epilogue = Epilogue()
+    blocks: Optional[Tuple[Optional[int], Optional[int], Optional[int]]] = None
+    stagger: bool = True
+
+    def __post_init__(self):
+        if self.structure not in STRUCTURES:
+            raise ValueError(
+                f"structure must be one of {STRUCTURES}, got {self.structure!r}"
+            )
+        if min(self.m, self.k, self.n) <= 0:
+            raise ValueError(f"dims must be positive, got {(self.m, self.k, self.n)}")
+        if self.batched_b and not self.batch:
+            raise ValueError("batched_b requires leading batch dims")
+        object.__setattr__(self, "batch", tuple(int(d) for d in self.batch))
+        object.__setattr__(self, "dtype_a", _dtype_name(self.dtype_a))
+        object.__setattr__(self, "dtype_b", _dtype_name(self.dtype_b))
+        if self.out_dtype is not None:
+            object.__setattr__(self, "out_dtype", _dtype_name(self.out_dtype))
+        if self.blocks is not None:
+            if len(self.blocks) != 3:
+                raise ValueError(
+                    f"blocks must be a (bm, bn, bk) triple, got {self.blocks!r}"
+                )
+            bks = tuple(None if x in (None, 0) else int(x) for x in self.blocks)
+            object.__setattr__(self, "blocks", None if bks == (None,) * 3 else bks)
+
+    @classmethod
+    def from_operands(
+        cls,
+        a: jax.Array,
+        b: jax.Array,
+        *,
+        structure: str = "general",
+        epilogue: Optional[Epilogue] = None,
+        out_dtype=None,
+        blocks=None,
+        stagger: bool = True,
+    ) -> "GemmSpec":
+        """Spec for concrete (or abstract) operands; leading dims of `a` become
+        the batch, shared with `b` when `b` carries the same leading dims."""
+        if a.ndim < 2 or b.ndim < 2:
+            raise ValueError(f"operands must be >= 2D, got {a.shape} @ {b.shape}")
+        if a.shape[-1] != b.shape[-2]:
+            raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+        batched_b = b.ndim > 2
+        if batched_b and a.shape[:-2] != b.shape[:-2]:
+            raise ValueError(f"batch dims mismatch: {a.shape} vs {b.shape}")
+        return cls(
+            m=a.shape[-2],
+            k=a.shape[-1],
+            n=b.shape[-1],
+            batch=a.shape[:-2],
+            batched_b=batched_b,
+            dtype_a=a.dtype,
+            dtype_b=b.dtype,
+            out_dtype=out_dtype,
+            structure=structure,
+            epilogue=epilogue or Epilogue(),
+            blocks=blocks,
+            stagger=stagger,
+        )
+
+    # -- derived quantities used at plan time --------------------------------
+
+    @property
+    def eff_m(self) -> int:
+        """M after folding leading batch dims (b 2D folds batch into M)."""
+        if self.batch and not self.batched_b:
+            return math.prod(self.batch) * self.m
+        return self.m
+
+    @property
+    def acc_dtype(self) -> str:
+        return _dtype_name(jnp.result_type(self.dtype_a, self.dtype_b))
+
+    def resolved_out_dtype(self) -> str:
+        return self.out_dtype or self.acc_dtype
+
+    def flops(self) -> int:
+        return 2 * math.prod(self.batch or (1,)) * self.m * self.k * self.n
+
+
+# ---------------------------------------------------------------------------
+# Capability-based backend registry
+# ---------------------------------------------------------------------------
+
+
+class CapabilityError(ValueError):
+    """A spec asks for something the (chosen or only) backend cannot do."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """What a registered backend declares it can execute.
+
+    structures        subset of STRUCTURES the impl can produce
+    batching          fully-batched (B, M, K) @ (B, K, N) operands
+    epilogue          the DESIGN.md §3 epilogue contract (fused or not)
+    epilogue_fusion   the epilogue runs inside the kernel (provenance only)
+    interpret         executes off-TPU (natively or via Pallas interpret mode)
+    autotune          consumes autotuned (bm, bn, bk) block shapes
+    """
+
+    structures: FrozenSet[str] = frozenset({"general"})
+    batching: bool = False
+    epilogue: bool = True
+    epilogue_fusion: bool = False
+    interpret: bool = True
+    autotune: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "structures", frozenset(self.structures))
+        unknown = self.structures - set(STRUCTURES)
+        if unknown:
+            raise ValueError(
+                f"unknown structures {sorted(unknown)}; known: {STRUCTURES}"
+            )
+
+
+_CAP_FIELDS = {f.name for f in dataclasses.fields(BackendCapabilities)}
+
+# impl(plan, a, b, bias, residual) -> array
+BackendImpl = Callable[["Plan", jax.Array, jax.Array, Any, Any], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class _Backend:
+    name: str
+    impl: BackendImpl
+    caps: BackendCapabilities
+
+
+_REGISTRY: Dict[str, _Backend] = {}
+
+# Plan cache: one entry per (spec, backend, platform) ever planned (defined
+# here because registration evicts from it).
+_PLAN_CACHE: Dict[tuple, "Plan"] = {}
+_PLAN_STATS = {"hits": 0, "misses": 0}
+
+
+def _evict_plans(name: str) -> None:
+    """Drop cached plans for one backend: a (re|un)registered impl must not
+    keep serving stale executables, and plans for OTHER backends stay valid
+    (and cached) — no global invalidation, no stranded entries."""
+    for key in [k for k in _PLAN_CACHE if k[1] == name]:
+        del _PLAN_CACHE[key]
+
+
+def register_backend(
+    name: str,
+    impl: BackendImpl,
+    capabilities: Union[BackendCapabilities, Mapping[str, Any]],
+    *,
+    override: bool = False,
+) -> None:
+    """Register a GEMM backend under `name` with declared capabilities.
+
+    `capabilities` is a BackendCapabilities or a mapping with only its field
+    names — unknown capability keys are rejected so typos never silently grant
+    an ability.  Duplicate names are rejected unless `override=True`.
+    """
+    if not isinstance(capabilities, BackendCapabilities):
+        unknown = set(capabilities) - _CAP_FIELDS
+        if unknown:
+            raise ValueError(
+                f"unknown capabilities {sorted(unknown)};"
+                f" known: {sorted(_CAP_FIELDS)}"
+            )
+        capabilities = BackendCapabilities(**capabilities)
+    if name in _REGISTRY and not override:
+        raise ValueError(
+            f"backend {name!r} already registered (pass override=True to replace)"
+        )
+    _REGISTRY[name] = _Backend(name, impl, capabilities)
+    _evict_plans(name)
+
+
+def unregister_backend(name: str) -> None:
+    if _REGISTRY.pop(name, None) is not None:
+        _evict_plans(name)
+    if _DEFAULT_BACKEND[0] == name:
+        _DEFAULT_BACKEND[0] = None
+        _DEFAULT_EPOCH[0] += 1
+
+
+def backend_names() -> List[str]:
+    return list(_REGISTRY)
+
+
+def get_capabilities(name: str) -> BackendCapabilities:
+    return _require_backend(name).caps
+
+
+def _require_backend(name: str) -> _Backend:
+    be = _REGISTRY.get(name)
+    if be is None:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {sorted(_REGISTRY)}"
+        )
+    return be
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _check_capabilities(spec: GemmSpec, be: _Backend) -> Optional[str]:
+    """None if `be` can run `spec` here; else a human-readable reason."""
+    caps = be.caps
+    if spec.structure not in caps.structures:
+        return (
+            f"backend {be.name!r} does not support structure"
+            f" {spec.structure!r} (supports {sorted(caps.structures)})"
+        )
+    if spec.batched_b and not caps.batching:
+        return f"backend {be.name!r} does not support fully-batched operands"
+    if not spec.epilogue.is_identity and not caps.epilogue:
+        return f"backend {be.name!r} does not support the fused-epilogue contract"
+    if not _on_tpu() and not caps.interpret:
+        return (
+            f"backend {be.name!r} requires TPU and has no interpret mode"
+            f" (running on {jax.default_backend()!r})"
+        )
+    return None
+
+
+# -- default backend (process default + scoped override) ---------------------
+
+_DEFAULT_BACKEND: List[Optional[str]] = [None]  # None = capability-based choice
+_DEFAULT_EPOCH: List[int] = [0]  # bumped on every default change (see ops.py)
+
+
+def set_default(name: Optional[str]) -> None:
+    """Install a process-wide default backend (None restores auto-choice)."""
+    if name is not None:
+        _require_backend(name)
+    _DEFAULT_BACKEND[0] = name
+    _DEFAULT_EPOCH[0] += 1
+
+
+def get_default() -> Optional[str]:
+    return _DEFAULT_BACKEND[0]
+
+
+def default_epoch() -> int:
+    """Monotonic counter of default-backend changes — lets the legacy shim
+    detect that its recorded default has been superseded by a newer
+    set_default/default_backend scope."""
+    return _DEFAULT_EPOCH[0]
+
+
+@contextlib.contextmanager
+def default_backend(name: str):
+    """Scoped default: `with default_backend("pallas_mesh"): ...` — the
+    supported replacement for the mutable `set_default_backend` global."""
+    prev = _DEFAULT_BACKEND[0]
+    set_default(name)
+    try:
+        yield
+    finally:
+        set_default(prev)
+
+
+def _choose_backend(spec: GemmSpec) -> _Backend:
+    """Capability-based choice: the pinned default first (if capable), then
+    xla, then pallas_mesh, then registration order."""
+    order: List[str] = []
+    for name in (
+        *((_DEFAULT_BACKEND[0],) if _DEFAULT_BACKEND[0] is not None else ()),
+        "xla",
+        "pallas_mesh",
+        *_REGISTRY,
+    ):
+        if name not in order:
+            order.append(name)
+    reasons = []
+    for name in order:
+        be = _REGISTRY.get(name)
+        if be is None:
+            continue
+        reason = _check_capabilities(spec, be)
+        if reason is None:
+            return be
+        reasons.append(reason)
+    raise CapabilityError(
+        "no registered backend can execute this spec: " + "; ".join(reasons)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared numerics (moved from ops.py so the shim stays thin)
+# ---------------------------------------------------------------------------
+
+# d/dz of each fused activation, as a function of the *pre-activation* z
+# (recomputed in the backward pass — remat, not an extra forward output).
+_ACT_GRADS = {
+    "relu": lambda z: (z > 0).astype(z.dtype),
+    "silu": lambda z: jax.nn.sigmoid(z) * (1 + z * (1 - jax.nn.sigmoid(z))),
+    "sigmoid": lambda z: jax.nn.sigmoid(z) * (1 - jax.nn.sigmoid(z)),
+    "tanh": lambda z: 1 - jnp.tanh(z) ** 2,
+    "gelu": lambda z: _gelu_grad(z),
+}
+
+
+def _gelu_grad(z):
+    """Analytic derivative of ACTIVATIONS['gelu'] (same GELU_C/GELU_A)."""
+    from repro.kernels.mesh_matmul import GELU_A, GELU_C
+
+    u = jnp.tanh(GELU_C * (z + GELU_A * z**3))
+    return 0.5 * (1 + u) + 0.5 * z * (1 - u**2) * GELU_C * (1 + 3 * GELU_A * z**2)
+
+
+def _act_grad(z: jax.Array, activation: str) -> jax.Array:
+    return _ACT_GRADS[activation](z)
+
+
+def _pad_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def apply_epilogue(
+    z: jax.Array,
+    bias: Optional[jax.Array],
+    activation: Optional[str],
+    residual: Optional[jax.Array],
+) -> jax.Array:
+    """The epilogue contract as plain jnp ops (f32 in, f32 out) — the single
+    unfused reference used by the XLA/ref backends and the unfused A/B lever."""
+    if bias is not None:
+        z = z + bias.astype(jnp.float32)
+    if activation not in (None, "none"):
+        z = ACTIVATIONS[activation](z)
+    if residual is not None:
+        z = z + residual.astype(jnp.float32)
+    return z
+
+
+def _mm_impl(a2, b2, bias, residual, opts) -> jax.Array:
+    """Mesh-kernel matmul (2D or fully-batched 3D) with padding to block
+    multiples and the fused epilogue."""
+    block_m, block_n, block_k, stagger, scramble, out_dtype, interpret, act = opts
+    batched = a2.ndim == 3
+    m, n = a2.shape[-2], b2.shape[-1]
+    ap = _pad_to(_pad_to(a2, block_m, -2), block_k, -1)
+    bp = _pad_to(_pad_to(b2, block_k, -2), block_n, -1)
+    if scramble and (ap.shape[-2] != m or bp.shape[-1] != n):
+        raise ValueError(
+            "structure='scrambled' requires block-aligned M and N "
+            f"(got M={m}, N={n} with blocks {block_m}x{block_n})"
+        )
+    bias_p = None if bias is None else _pad_to(bias, block_n, 0)
+    res_p = (
+        None
+        if residual is None
+        else _pad_to(_pad_to(residual, block_m, -2), block_n, -1)
+    )
+    kernel = mesh_matmul_pallas_batched if batched else mesh_matmul_pallas
+    out = kernel(
+        ap,
+        bp,
+        bias=bias_p,
+        residual=res_p,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        stagger=stagger,
+        scramble_out=scramble,
+        activation=act,
+        out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    return out[..., :m, :n]
+
+
+# pallas_call has no JVP rule, so training graphs need an explicit VJP.
+# Forward: y = act(A @ B + bias) + residual (epilogue fused in-kernel).
+# Backward: dresidual = g; dz = g * act'(z) with z recomputed by one plain
+# kernel call (remat — no extra forward output); dA = dz Bᵀ and dB = Aᵀ dz are
+# two more mesh-kernel matmuls; dbias reduces dz over rows.  For the scrambled
+# structure C = S(...), the cotangent is unscrambled (a pure gather — the
+# permutation's own transpose) first, putting the whole backward in standard
+# arrangement.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _mm(a2, b2, bias, residual, opts) -> jax.Array:
+    return _mm_impl(a2, b2, bias, residual, opts)
+
+
+def _mm_fwd(a2, b2, bias, residual, opts):
+    # dresidual only needs residual's DTYPE — save a scalar sentinel, not the
+    # full output-sized tensor (it would stay live until the backward pass).
+    res_sentinel = None if residual is None else jnp.zeros((), residual.dtype)
+    return _mm_impl(a2, b2, bias, residual, opts), (a2, b2, bias, res_sentinel)
+
+
+def _mm_bwd(opts, res, g):
+    a2, b2, bias, res_sentinel = res
+    block_m, block_n, block_k, stagger, scramble, _, interpret, act = opts
+    if scramble:
+        g = ref.unscramble_blocks_ref(g, block_m=block_m, block_n=block_n)
+    gf = g.astype(jnp.float32)
+    dresidual = None if res_sentinel is None else g.astype(res_sentinel.dtype)
+
+    if act in (None, "none"):
+        dz = gf
+    else:
+        # Remat the pre-activation z = A @ B + bias with a plain (no-epilogue,
+        # unscrambled) kernel call, then chain through act'.
+        opts_z = (block_m, block_n, block_k, stagger, False, jnp.float32, interpret, None)
+        z = _mm_impl(
+            a2.astype(jnp.float32), b2.astype(jnp.float32), None, None, opts_z
+        )
+        if bias is not None:
+            z = z + bias.astype(jnp.float32)
+        dz = gf * _act_grad(z, act)
+
+    opts_a = (block_m, block_k, block_n, stagger, False, jnp.float32, interpret, None)
+    opts_b = (block_k, block_n, block_m, stagger, False, jnp.float32, interpret, None)
+    bT = jnp.swapaxes(b2, -1, -2).astype(jnp.float32)
+    aT = jnp.swapaxes(a2, -1, -2).astype(jnp.float32)
+    da = _mm(dz, bT, None, None, opts_a)
+    db = _mm(aT, dz, None, None, opts_b)
+    dbias = (
+        None
+        if bias is None
+        else jnp.sum(dz, axis=tuple(range(dz.ndim - 1))).astype(bias.dtype)
+    )
+    return da.astype(a2.dtype), db.astype(b2.dtype), dbias, dresidual
+
+
+_mm.defvjp(_mm_fwd, _mm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Plan:
+    """A resolved, reusable GEMM executable with provenance.
+
+    Built once by `plan(spec)`; calling it runs the chosen backend with the
+    blocks/tables fixed at plan time.  Provenance (backend, blocks, estimated
+    FLOPs/VMEM, σ table) is inspectable via the fields or `describe()`.
+    """
+
+    spec: GemmSpec
+    backend: str
+    capabilities: BackendCapabilities
+    blocks: Optional[Tuple[int, int, int]]
+    out_dtype: str
+    interpret: bool
+    flops: int
+    vmem_bytes: Optional[int]
+    sigma_table: Optional[np.ndarray] = None
+    stagger_table: Optional[np.ndarray] = None
+    _fn: Optional[Callable] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def activation(self) -> Optional[str]:
+        return self.spec.epilogue.activation
+
+    @property
+    def executor(self) -> Callable:
+        """The raw jitted executor `(a, b, bias, residual) -> out`, with no
+        per-call Python validation — for benchmarking and trusted hot loops
+        where even `__call__`'s shape/dtype checks are measurable."""
+        return self._fn
+
+    def describe(self) -> Dict[str, Any]:
+        """JSON-able provenance record (benchmarks / serving telemetry)."""
+        return {
+            "backend": self.backend,
+            "structure": self.spec.structure,
+            "mkn": f"{self.spec.eff_m}x{self.spec.k}x{self.spec.n}",
+            "batch": list(self.spec.batch),
+            "blocks": list(self.blocks) if self.blocks else None,
+            "epilogue": {
+                "bias": self.spec.epilogue.bias,
+                "activation": self.activation,
+                "residual": self.spec.epilogue.residual,
+            },
+            "fused_epilogue": self.capabilities.epilogue_fusion,
+            "out_dtype": self.out_dtype,
+            "interpret": self.interpret,
+            "flops": self.flops,
+            "vmem_bytes": self.vmem_bytes,
+        }
+
+    # -- execution -----------------------------------------------------------
+
+    def _check_operands(self, a, b, bias, residual):
+        spec = self.spec
+        want_a = spec.batch + (spec.m, spec.k)
+        want_b = (spec.batch if spec.batched_b else ()) + (spec.k, spec.n)
+        if tuple(a.shape) != want_a or tuple(b.shape) != want_b:
+            raise ValueError(
+                f"operands {a.shape} @ {b.shape} do not match plan spec "
+                f"{want_a} @ {want_b}"
+            )
+        got_dt = (_dtype_name(a.dtype), _dtype_name(b.dtype))
+        if got_dt != (spec.dtype_a, spec.dtype_b):
+            # out_dtype and the autotuned/VMEM-budgeted blocks were fixed for
+            # the spec's dtypes — a silent cast here would mask caller intent
+            raise ValueError(
+                f"operand dtypes {got_dt} do not match plan spec "
+                f"({spec.dtype_a}, {spec.dtype_b}); build a new GemmSpec"
+            )
+        epi = spec.epilogue
+        for name, arr, declared in (
+            ("bias", bias, epi.bias),
+            ("residual", residual, epi.residual),
+        ):
+            if (arr is not None) != declared:
+                state = "with" if declared else "without"
+                raise ValueError(
+                    f"plan was built {state} {name}; pass a matching "
+                    f"Epilogue in the GemmSpec to change the contract"
+                )
+        # Epilogue shape validation — identical on every backend (same
+        # exception type/message), against the LOGICAL (unpadded) shapes.
+        _check_epilogue_shapes(bias, residual, spec)
+
+    def __call__(self, a, b, bias=None, residual=None) -> jax.Array:
+        self._check_operands(a, b, bias, residual)
+        return self._fn(a, b, bias, residual)
+
+
+def _check_epilogue_shapes(bias, residual, spec: GemmSpec) -> None:
+    """The `_check_epilogue` contract at the dispatch layer: every backend —
+    XLA included — rejects malformed bias/residual with the same error."""
+    n = spec.n
+    if bias is not None and tuple(bias.shape) != (n,):
+        raise ValueError(f"bias must have shape ({n},), got {tuple(bias.shape)}")
+    want_res = spec.batch + (spec.m, n)
+    if residual is not None and tuple(residual.shape) != want_res:
+        raise ValueError(
+            f"residual must have shape {want_res}, got {tuple(residual.shape)}"
+        )
+
+
+# -- built-in backend implementations ----------------------------------------
+
+
+def _xla_impl(p: Plan, a, b, bias, residual):
+    z = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    return apply_epilogue(z, bias, p.activation, residual).astype(p.out_dtype)
+
+
+def _ref_impl(p: Plan, a, b, bias, residual):
+    """Pure-jnp oracle backend: same contract, no Pallas — registered through
+    the same capability door as the real kernels (and usable as a test double)."""
+    z = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    y = apply_epilogue(z, bias, p.activation, residual)
+    if p.spec.structure == "scrambled":
+        bm, bn, _ = p.blocks
+        y = ref.scramble_blocks_ref(y, block_m=bm, block_n=bn)
+    return y.astype(p.out_dtype)
+
+
+def _pallas_impl(p: Plan, a, b, bias, residual):
+    spec = p.spec
+    bm, bn, bk = p.blocks
+    opts = (
+        bm,
+        bn,
+        bk,
+        spec.stagger,
+        spec.structure == "scrambled",
+        jnp.dtype(p.out_dtype),
+        p.interpret,
+        spec.epilogue.activation,
+    )
+    if not spec.batch:
+        return _mm(a, b, bias, residual, opts)
+    if not spec.batched_b:
+        # Fold leading batch dims of `a` into M — still a single 2D kernel.
+        a2 = a.reshape(-1, spec.k)
+        res2 = None if residual is None else residual.reshape(-1, spec.n)
+        out = _mm(a2, b, bias, res2, opts)
+        return out.reshape(*spec.batch, spec.m, spec.n)
+    # Fully batched: ONE pallas_call with grid (b, i, j, k).
+    af = a.reshape(-1, spec.m, spec.k)
+    bf = b.reshape(-1, spec.k, spec.n)
+    resf = None if residual is None else residual.reshape(-1, spec.m, spec.n)
+    out = _mm(af, bf, bias, resf, opts)
+    return out.reshape(*spec.batch, spec.m, spec.n)
+
+
+register_backend(
+    "xla",
+    _xla_impl,
+    BackendCapabilities(
+        structures=frozenset({"general", "symmetric"}),
+        batching=True,
+        epilogue=True,
+        epilogue_fusion=False,  # XLA may fuse, but it is not contractual
+        interpret=True,  # native everywhere
+        autotune=False,
+    ),
+)
+register_backend(
+    "pallas_mesh",
+    _pallas_impl,
+    BackendCapabilities(
+        structures=frozenset({"general", "symmetric", "scrambled"}),
+        batching=True,
+        epilogue=True,
+        epilogue_fusion=True,
+        interpret=True,  # Pallas interpret mode off-TPU
+        autotune=True,
+    ),
+)
+register_backend(
+    "ref",
+    _ref_impl,
+    BackendCapabilities(
+        structures=frozenset({"general", "symmetric", "scrambled"}),
+        batching=True,
+        epilogue=True,
+        epilogue_fusion=False,
+        interpret=True,
+        autotune=False,
+    ),
+)
+
+
+# ---------------------------------------------------------------------------
+# plan()
+# ---------------------------------------------------------------------------
+
+
+def plan(spec: GemmSpec, *, backend: Optional[str] = None) -> Plan:
+    """Validate `spec` against backend capabilities and return the cached,
+    reusable executable for it.
+
+    Resolution happens ONCE per (spec, backend) pair per platform: capability
+    checks, autotuned block shapes, σ/stagger tables, and the jitted executor
+    are all fixed here; repeated calls return the *identical* Plan object.
+    An explicit `backend` is validated strictly (CapabilityError on mismatch);
+    otherwise the first capable backend is chosen (pinned default → xla →
+    pallas_mesh → registration order).
+    """
+    if not isinstance(spec, GemmSpec):
+        raise TypeError(f"plan() takes a GemmSpec, got {type(spec).__name__}")
+    if backend is not None:
+        be = _require_backend(backend)
+        reason = _check_capabilities(spec, be)
+        if reason is not None:
+            raise CapabilityError(reason)
+    else:
+        be = _choose_backend(spec)
+
+    key = (spec, be.name, jax.default_backend())
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        _PLAN_STATS["hits"] += 1
+        return cached
+    _PLAN_STATS["misses"] += 1
+
+    p = _build_plan(spec, be)
+    _PLAN_CACHE[key] = p
+    return p
+
+
+def _build_plan(spec: GemmSpec, be: _Backend) -> Plan:
+    acc_dtype = spec.acc_dtype
+    blocks = None
+    vmem = None
+    if be.caps.autotune or spec.structure == "scrambled":
+        partial = spec.blocks or (None, None, None)
+        if None in partial:
+            # The scrambled σ-table constraint and the symmetric early-readout
+            # regime key their own autotune-cache partitions.
+            tune_backend = (
+                "pallas_mesh_scrambled" if spec.structure == "scrambled" else be.name
+            )
+            symmetry = 1 if spec.structure == "symmetric" else 0
+            bm, bn, bk = _autotune.resolve_blocks(
+                spec.eff_m, spec.k, spec.n, acc_dtype, tune_backend, symmetry=symmetry
+            )
+            blocks = tuple(p or r for p, r in zip(partial, (bm, bn, bk)))
+        else:
+            blocks = partial
+        vmem = _autotune.vmem_bytes(
+            *blocks,
+            acc_dtype,
+            has_bias=spec.epilogue.bias,
+            has_residual=spec.epilogue.residual,
+        )
+
+    sigma = stagger_tbl = None
+    if spec.structure == "symmetric" and spec.m != spec.n:
+        raise ValueError(
+            f"structure='symmetric' requires a square product, got "
+            f"{spec.m}x{spec.n}"
+        )
+    if spec.structure == "scrambled":
+        bm, bn, bk = blocks
+        eff_m, n = spec.eff_m, spec.n
+        if eff_m % bm or n % bn:
+            raise ValueError(
+                "structure='scrambled' requires block-aligned M and N "
+                f"(got M={eff_m}, N={n} with blocks {bm}x{bn})"
+            )
+        if eff_m // bm != n // bn:
+            raise ValueError(
+                f"scramble_out needs square block grid, got {eff_m // bm}x{n // bn}"
+            )
+        # σ lookup table, host-side numpy, once — the kernel's scalar-prefetch
+        # input is an lru_cache hit from here on.
+        sigma = sigma_block_table(eff_m // bm)
+    if blocks is not None and spec.stagger:
+        # Per-cell k-rotation offsets ((i + j) mod nk) — the staggered
+        # schedule as a host-side table, recorded for provenance/debug.
+        bm, bn, bk = blocks
+        nm = -(-spec.eff_m // bm)
+        nn = -(-spec.n // bn)
+        nk = -(-spec.k // bk)
+        stagger_tbl = np.add.outer(np.arange(nm), np.arange(nn)) % max(nk, 1)
+
+    p = Plan(
+        spec=spec,
+        backend=be.name,
+        capabilities=be.caps,
+        blocks=blocks,
+        out_dtype=spec.resolved_out_dtype(),
+        interpret=not _on_tpu(),
+        flops=spec.flops(),
+        vmem_bytes=vmem,
+        sigma_table=sigma,
+        stagger_table=stagger_tbl,
+    )
+    impl = be.impl
+    p._fn = jax.jit(lambda a, b, bias, residual: impl(p, a, b, bias, residual))
+    return p
+
+
+def clear_plan_cache() -> None:
+    """Test hook: drop all cached plans and reset the hit/miss counters."""
+    _PLAN_CACHE.clear()
+    _PLAN_STATS.update(hits=0, misses=0)
+
+
+def plan_cache_info() -> Dict[str, Any]:
+    """Cache telemetry: one entry per (spec, backend) pair ever planned."""
+    return {
+        "size": len(_PLAN_CACHE),
+        "hits": _PLAN_STATS["hits"],
+        "misses": _PLAN_STATS["misses"],
+        "plans": [p.describe() for p in _PLAN_CACHE.values()],
+    }

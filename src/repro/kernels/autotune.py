@@ -397,13 +397,18 @@ def autotune(
 _RESOLVE_MEMO: Dict[tuple, Blocks] = {}
 
 
-def resolve_blocks(m: int, k: int, n: int, dtype, backend: str) -> Blocks:
-    """`ops.matmul`'s entry point: memoized per-process, cache-backed, never
-    times on non-TPU hosts (mode="auto")."""
-    memo_key = (m, k, n, jnp.dtype(dtype).name, backend, jax.default_backend())
+def resolve_blocks(
+    m: int, k: int, n: int, dtype, backend: str, *, symmetry: int = 0
+) -> Blocks:
+    """The dispatch layer's entry point (`kernels/api.plan`): memoized
+    per-process, cache-backed, never times on non-TPU hosts (mode="auto").
+    `symmetry=1` keys the symmetric-readout regime's own cache partition."""
+    memo_key = (
+        m, k, n, jnp.dtype(dtype).name, backend, symmetry, jax.default_backend()
+    )
     got = _RESOLVE_MEMO.get(memo_key)
     if got is None:
-        got = autotune(m, k, n, dtype, backend)
+        got = autotune(m, k, n, dtype, backend, symmetry=symmetry)
         _RESOLVE_MEMO[memo_key] = got
     return got
 

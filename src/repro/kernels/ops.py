@@ -1,48 +1,34 @@
-"""Public GEMM / scramble entry points — the framework's matmul dispatch layer.
+"""Legacy GEMM entry points — a thin compat shim over `repro.kernels.api`.
 
-Every dense layer in `repro.models` routes its projections through
-`repro.kernels.ops.matmul`, making the paper's kernel a first-class selectable
-GEMM backend:
+The real dispatch layer is the plan/execute API (DESIGN.md §8):
 
-  backend="xla"          jnp.dot (default for pjit'd full-scale graphs — XLA
-                         owns the sharded GEMM + collective schedule there)
-  backend="pallas_mesh"  the Pallas mesh-array staggered-k kernel
-  backend="pallas_mesh_scrambled"
-                         same, with the paper's S fused into the output
-                         BlockSpec (square block grids only)
+    from repro.kernels import api
+    spec = api.GemmSpec.from_operands(a, b, epilogue=api.Epilogue(bias=True))
+    p = api.plan(spec)          # capability-validated, autotuned, cached
+    y = p(a, b, bias=bias)      # reusable jitted executable
 
-The wrapper pads arbitrary shapes up to block multiples, folds leading batch
-dims (fully-batched operands compile to ONE `pallas_call` with a (b, i, j, k)
-grid — no per-element vmap launch), and on CPU runs Pallas in interpret mode
-automatically (TPU compiles).
+`matmul` here keeps every former call shape working: string `backend=`
+selection (including the old `pallas_mesh_scrambled` pseudo-backend, now
+`structure="scrambled"` on the spec) and the mutable process-global
+`set_default_backend` both still function, each emitting a DeprecationWarning
+once per process.  New code should build a `GemmSpec` — or use the scoped
+`api.default_backend(...)` context manager instead of the global setter.
 
-Block shapes: explicit `block_m/n/k` are honored as given; any left as None
-are resolved through `kernels/autotune.py` (persistent per-shape cache; a hit
-never searches).  The fused epilogue (bias + activation + residual — the
-contract is y = act(AB + bias) + residual, DESIGN.md §3) is available on
-every backend so `models/layers.dense` can call one API; on the Pallas
-backends it executes inside the kernel's final-k flush.
-
-A process-wide default backend can be installed with `set_default_backend`
-(used by configs' `use_mesh_kernel` flag).
+`scramble_blocks` (S^k at block granularity) is not deprecated; it lives here
+unchanged.
 """
 
 from __future__ import annotations
 
 import functools
-import math
+import warnings
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import autotune as _autotune
+from repro.kernels import api
+from repro.kernels.api import Epilogue, GemmSpec, apply_epilogue  # re-exports
 from repro.kernels import ref
-from repro.kernels.mesh_matmul import (
-    ACTIVATIONS,
-    mesh_matmul_pallas,
-    mesh_matmul_pallas_batched,
-)
 from repro.kernels.scramble_kernel import scramble_blocks_pallas
 
 __all__ = [
@@ -53,176 +39,82 @@ __all__ = [
     "set_default_backend",
 ]
 
-_DEFAULT_BACKEND = "xla"
-_VALID = ("xla", "pallas_mesh", "pallas_mesh_scrambled")
+# The old pseudo-backend name: scrambled output is a *structure* now, but the
+# string keeps routing for existing callers.
+_SCRAMBLED_ALIAS = "pallas_mesh_scrambled"
 
-# d/dz of each fused activation, as a function of the *pre-activation* z
-# (recomputed in the backward pass — remat, not an extra forward output).
-_ACT_GRADS = {
-    "relu": lambda z: (z > 0).astype(z.dtype),
-    "silu": lambda z: jax.nn.sigmoid(z) * (1 + z * (1 - jax.nn.sigmoid(z))),
-    "sigmoid": lambda z: jax.nn.sigmoid(z) * (1 - jax.nn.sigmoid(z)),
-    "tanh": lambda z: 1 - jnp.tanh(z) ** 2,
-    "gelu": lambda z: _gelu_grad(z),
-}
+# Set only by the deprecated set_default_backend; None = defer to the api
+# default (the scoped default_backend context manager), then "xla".
+# _LEGACY_EPOCH records api.default_epoch() at install time: any later
+# set_default/default_backend change supersedes the legacy string entirely.
+_LEGACY_DEFAULT: Optional[str] = None
+_LEGACY_EPOCH: Optional[int] = None
+
+_WARNED: set = set()
 
 
-def _gelu_grad(z):
-    """Analytic derivative of ACTIVATIONS['gelu'] (same GELU_C/GELU_A)."""
-    from repro.kernels.mesh_matmul import GELU_A, GELU_C
+def _warn_once(kind: str, message: str, stacklevel: int = 3) -> None:
+    """Deprecation warnings fire once per process per kind, attributed to the
+    *external* caller of the public shim function — never to this module, so
+    CI's first-party deprecation gate only trips on unmigrated repro code."""
+    if kind in _WARNED:
+        return
+    _WARNED.add(kind)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
 
-    u = jnp.tanh(GELU_C * (z + GELU_A * z**3))
-    return 0.5 * (1 + u) + 0.5 * z * (1 - u**2) * GELU_C * (1 + 3 * GELU_A * z**2)
+
+def _valid_names() -> tuple:
+    return tuple(api.backend_names()) + (_SCRAMBLED_ALIAS,)
+
+
+def _split_legacy(name: str) -> tuple:
+    """Legacy backend string -> (registry backend, structure)."""
+    if name == _SCRAMBLED_ALIAS:
+        _warn_once(
+            "scrambled-pseudo-backend",
+            f"backend={_SCRAMBLED_ALIAS!r} is deprecated; use "
+            "GemmSpec(structure='scrambled') with the 'pallas_mesh' backend",
+            stacklevel=4,  # _warn_once -> here -> matmul -> external caller
+        )
+        return "pallas_mesh", "scrambled"
+    return name, "general"
 
 
 def set_default_backend(backend: str) -> None:
-    global _DEFAULT_BACKEND
-    if backend not in _VALID:
-        raise ValueError(f"backend must be one of {_VALID}, got {backend!r}")
-    _DEFAULT_BACKEND = backend
+    """Deprecated: install a process-wide default backend string.
+
+    Prefer the scoped `api.default_backend(name)` context manager, or pass
+    `backend=` to `api.plan` explicitly.
+    """
+    global _LEGACY_DEFAULT, _LEGACY_EPOCH
+    if backend not in _valid_names():
+        raise ValueError(
+            f"backend must be one of {_valid_names()}, got {backend!r}"
+        )
+    _warn_once(  # after validation: a typo'd call must not consume the warning
+        "set-default-backend",
+        "set_default_backend is deprecated; use the "
+        "repro.kernels.api.default_backend(...) context manager or "
+        "plan(spec, backend=...)",
+    )
+    _LEGACY_DEFAULT = backend
+    api.set_default("pallas_mesh" if backend == _SCRAMBLED_ALIAS else backend)
+    _LEGACY_EPOCH = api.default_epoch()
 
 
 def get_default_backend() -> str:
-    return _DEFAULT_BACKEND
+    return _default_name()
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _pad_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
-    size = x.shape[axis]
-    pad = (-size) % multiple
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
-def apply_epilogue(
-    z: jax.Array,
-    bias: Optional[jax.Array],
-    activation: Optional[str],
-    residual: Optional[jax.Array],
-) -> jax.Array:
-    """The epilogue contract as plain jnp ops (f32 in, f32 out) — the single
-    unfused reference used by the XLA backend and the unfused A/B lever."""
-    if bias is not None:
-        z = z + bias.astype(jnp.float32)
-    if activation not in (None, "none"):
-        z = ACTIVATIONS[activation](z)
-    if residual is not None:
-        z = z + residual.astype(jnp.float32)
-    return z
-
-
-def _act_grad(z: jax.Array, activation: str) -> jax.Array:
-    fn = _ACT_GRADS[activation]
-    return fn(z)
-
-
-def _mm_impl(a2, b2, bias, residual, opts) -> jax.Array:
-    """Mesh-kernel matmul (2D or fully-batched 3D) with padding to block
-    multiples and the fused epilogue."""
-    block_m, block_n, block_k, stagger, scramble, out_dtype, interpret, act = opts
-    batched = a2.ndim == 3
-    m, n = a2.shape[-2], b2.shape[-1]
-    ap = _pad_to(_pad_to(a2, block_m, -2), block_k, -1)
-    bp = _pad_to(_pad_to(b2, block_k, -2), block_n, -1)
-    if scramble and (ap.shape[-2] != m or bp.shape[-1] != n):
-        raise ValueError(
-            "pallas_mesh_scrambled requires block-aligned M and N "
-            f"(got M={m}, N={n} with blocks {block_m}x{block_n})"
-        )
-    bias_p = None if bias is None else _pad_to(bias, block_n, 0)
-    res_p = (
-        None
-        if residual is None
-        else _pad_to(_pad_to(residual, block_m, -2), block_n, -1)
-    )
-    kernel = mesh_matmul_pallas_batched if batched else mesh_matmul_pallas
-    out = kernel(
-        ap,
-        bp,
-        bias=bias_p,
-        residual=res_p,
-        block_m=block_m,
-        block_n=block_n,
-        block_k=block_k,
-        stagger=stagger,
-        scramble_out=scramble,
-        activation=act,
-        out_dtype=out_dtype,
-        interpret=interpret,
-    )
-    return out[..., :m, :n]
-
-
-# pallas_call has no JVP rule, so training graphs need an explicit VJP.
-# Forward: y = act(A @ B + bias) + residual (epilogue fused in-kernel).
-# Backward: dresidual = g; dz = g * act'(z) with z recomputed by one plain
-# kernel call (remat — no extra forward output); dA = dz Bᵀ and dB = Aᵀ dz are
-# two more mesh-kernel matmuls; dbias reduces dz over rows.  For the scrambled
-# backend C = S(...), the cotangent is unscrambled (a pure gather — the
-# permutation's own transpose) first, putting the whole backward in standard
-# arrangement.
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
-def _mm(a2, b2, bias, residual, opts) -> jax.Array:
-    return _mm_impl(a2, b2, bias, residual, opts)
-
-
-def _mm_fwd(a2, b2, bias, residual, opts):
-    # dresidual only needs residual's DTYPE — save a scalar sentinel, not the
-    # full output-sized tensor (it would stay live until the backward pass).
-    res_sentinel = None if residual is None else jnp.zeros((), residual.dtype)
-    return _mm_impl(a2, b2, bias, residual, opts), (a2, b2, bias, res_sentinel)
-
-
-def _mm_bwd(opts, res, g):
-    a2, b2, bias, res_sentinel = res
-    block_m, block_n, block_k, stagger, scramble, _, interpret, act = opts
-    if scramble:
-        g = ref.unscramble_blocks_ref(g, block_m=block_m, block_n=block_n)
-    gf = g.astype(jnp.float32)
-    dresidual = None if res_sentinel is None else g.astype(res_sentinel.dtype)
-
-    if act in (None, "none"):
-        dz = gf
-    else:
-        # Remat the pre-activation z = A @ B + bias with a plain (no-epilogue,
-        # unscrambled) kernel call, then chain through act'.
-        opts_z = (block_m, block_n, block_k, stagger, False, jnp.float32, interpret, None)
-        z = _mm_impl(
-            a2.astype(jnp.float32), b2.astype(jnp.float32), None, None, opts_z
-        )
-        if bias is not None:
-            z = z + bias.astype(jnp.float32)
-        dz = gf * _act_grad(z, act)
-
-    opts_a = (block_m, block_k, block_n, stagger, False, jnp.float32, interpret, None)
-    opts_b = (block_k, block_n, block_m, stagger, False, jnp.float32, interpret, None)
-    bT = jnp.swapaxes(b2, -1, -2).astype(jnp.float32)
-    aT = jnp.swapaxes(a2, -1, -2).astype(jnp.float32)
-    da = _mm(dz, bT, None, None, opts_a)
-    db = _mm(aT, dz, None, None, opts_b)
-    dbias = (
-        None
-        if bias is None
-        else jnp.sum(dz, axis=tuple(range(dz.ndim - 1))).astype(bias.dtype)
-    )
-    return da.astype(a2.dtype), db.astype(b2.dtype), dbias, dresidual
-
-
-_mm.defvjp(_mm_fwd, _mm_bwd)
-
-
-def _resolve_blocks(block_m, block_n, block_k, m, k, n, dtype, backend):
-    """Fill any block sizes not explicitly passed from the autotune cache."""
-    if block_m is not None and block_n is not None and block_k is not None:
-        return block_m, block_n, block_k
-    bm, bn, bk = _autotune.resolve_blocks(m, k, n, dtype, backend)
-    return block_m or bm, block_n or bn, block_k or bk
+def _default_name() -> str:
+    """Default resolution for calls without backend=: the legacy string holds
+    only while the api default is *still the one set_default_backend
+    installed* (epoch check) — so a `pallas_mesh_scrambled` default retains
+    its scrambled structure, but any newer api.set_default / default_backend
+    scope (including None for auto-choice) supersedes it."""
+    if _LEGACY_DEFAULT is not None and _LEGACY_EPOCH == api.default_epoch():
+        return _LEGACY_DEFAULT
+    return api.get_default() or "xla"
 
 
 def matmul(
@@ -242,68 +134,46 @@ def matmul(
     """General fused matmul over the trailing two dims: (..., M, K) @ (K, N)
     or batched (..., M, K) @ (..., K, N).
 
-    Epilogue contract (all backends): y = act(a @ b + bias) + residual, with
-    the accumulation and epilogue in float32, cast to out_dtype at the end.
-    bias is (N,); residual matches the output shape.  Block sizes left as
-    None are resolved via `kernels/autotune.py` (cache hit => no search).
+    Compat shim: builds a `GemmSpec` and routes through `api.plan` — the plan
+    cache makes repeated calls with the same logical shape cheap.  Epilogue
+    contract (all backends): y = act(a @ b + bias) + residual, f32 accumulate,
+    cast to out_dtype at the end.  bias is (N,); residual matches the output
+    shape.  Block sizes left as None are resolved via `kernels/autotune.py`.
     """
-    backend = backend or _DEFAULT_BACKEND
-    if backend not in _VALID:
-        raise ValueError(f"backend must be one of {_VALID}, got {backend!r}")
-    if activation not in ACTIVATIONS:  # same error on every backend
-        raise ValueError(
-            f"activation must be one of {sorted(k for k in ACTIVATIONS if k)},"
-            f" got {activation!r}"
+    if backend is not None:
+        if backend not in _valid_names():
+            raise ValueError(
+                f"backend must be one of {_valid_names()}, got {backend!r}"
+            )
+        _warn_once(  # after validation: a typo'd call must not consume it
+            "string-backend",
+            "passing backend= strings to ops.matmul is deprecated; build a "
+            "GemmSpec and call repro.kernels.api.plan(spec, backend=...)",
         )
-    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
-
-    if backend == "xla":
-        z = jnp.matmul(a, b, preferred_element_type=jnp.float32)
-        return apply_epilogue(z, bias, activation, residual).astype(out_dtype)
-
-    scramble = backend == "pallas_mesh_scrambled"
-    # Effective M for tuning: leading batch dims of `a` fold into M when `b`
-    # is 2D; fully-batched calls tune the per-element (M, K, N) GEMM.
-    eff_m = math.prod(a.shape[:-1]) if b.ndim == 2 else a.shape[-2]
-    block_m, block_n, block_k = _resolve_blocks(
-        block_m,
-        block_n,
-        block_k,
-        eff_m,
-        a.shape[-1],
-        b.shape[-1],
-        jnp.result_type(a.dtype, b.dtype),
-        backend,
+    name, structure = _split_legacy(backend or _default_name())
+    blocks = (
+        None
+        if block_m is block_n is block_k is None
+        else (block_m, block_n, block_k)
     )
-    opts = (
-        block_m,
-        block_n,
-        block_k,
-        stagger,
-        scramble,
-        jnp.dtype(out_dtype),
-        not _on_tpu(),
-        None if activation in (None, "none") else activation,
+    spec = GemmSpec.from_operands(
+        a,
+        b,
+        structure=structure,
+        epilogue=Epilogue(
+            bias=bias is not None,
+            activation=activation,
+            residual=residual is not None,
+        ),
+        out_dtype=out_dtype,
+        blocks=blocks,
+        stagger=stagger,
     )
+    return api.plan(spec, backend=name)(a, b, bias=bias, residual=residual)
 
-    if a.ndim == 2 and b.ndim == 2:
-        return _mm(a, b, bias, residual, opts)
-    if b.ndim == 2:
-        # Fold leading batch dims of `a` into M — still a single 2D kernel.
-        lead = a.shape[:-2]
-        a2 = a.reshape(-1, a.shape[-1])
-        res2 = None if residual is None else residual.reshape(-1, residual.shape[-1])
-        out = _mm(a2, b, bias, res2, opts)
-        return out.reshape(*lead, a.shape[-2], b.shape[-1])
-    # Fully batched: ONE pallas_call with grid (b, i, j, k).
-    if a.shape[:-2] != b.shape[:-2]:
-        raise ValueError(f"batch dims mismatch: {a.shape} vs {b.shape}")
-    lead = a.shape[:-2]
-    af = a.reshape(-1, *a.shape[-2:])
-    bf = b.reshape(-1, *b.shape[-2:])
-    resf = None if residual is None else residual.reshape(-1, *residual.shape[-2:])
-    out = _mm(af, bf, bias, resf, opts)
-    return out.reshape(*lead, *out.shape[-2:])
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
 
 
 # The permutation's linearization is itself; its transpose is the inverse

@@ -7,6 +7,13 @@ runtime).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
       --batch 4 --prompt-len 32 --gen 16
+
+Every projection GEMM routes through the plan/execute API
+(`repro.kernels.api`): the first prefill/decode trace *plans* each logical
+GEMM shape once (backend choice, autotuned blocks, σ tables), and the
+process-wide plan cache serves every subsequent request — `--plan-stats`
+prints the cache (one entry per (spec, backend) pair, however many requests
+ran).
 """
 
 from __future__ import annotations
@@ -19,10 +26,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.kernels import api as kernel_api
 from repro.models import ShardCtx, get_model
 from repro.train.train_step import make_prefill_step, make_serve_step
 
-__all__ = ["generate", "main"]
+__all__ = ["generate", "main", "report_plan_cache"]
+
+
+def report_plan_cache(prefix: str = "[serve]") -> dict:
+    """Print + return the GEMM plan-cache telemetry for this process.
+
+    Serving wants planning out of the request path: each (spec, backend)
+    pair is planned at most once per process, and this report is the
+    observable proof (hits = executions that reused an existing plan).
+    """
+    info = kernel_api.plan_cache_info()
+    print(
+        f"{prefix} GEMM plan cache: {info['size']} plans, "
+        f"{info['hits']} hits, {info['misses']} misses"
+    )
+    for p in info["plans"]:
+        blocks = "x".join(map(str, p["blocks"])) if p["blocks"] else "-"
+        epi = p["epilogue"]
+        epi_s = (
+            ("+b" if epi["bias"] else "")
+            + (f"+{epi['activation']}" if epi["activation"] else "")
+            + ("+r" if epi["residual"] else "")
+        ) or "-"
+        print(
+            f"{prefix}   {p['backend']:11s} {p['structure']:9s} "
+            f"{p['mkn']:>18s} batch={p['batch'] or '-'} blocks={blocks} "
+            f"epi={epi_s:12s} flops={p['flops']:.2e}"
+        )
+    return info
 
 
 def generate(
@@ -79,6 +115,11 @@ def main(argv=None) -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--plan-stats",
+        action="store_true",
+        help="print the GEMM plan cache after serving (one plan per spec)",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -96,6 +137,8 @@ def main(argv=None) -> None:
     print(f"[serve] {args.arch} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
     print(f"[serve] decode steps/s: {rate:.2f}  ({rate * args.batch:.1f} tok/s batched)")
     print(f"[serve] sample row 0: {np.asarray(out[0])[:16]}")
+    if args.plan_stats:
+        report_plan_cache()
 
 
 if __name__ == "__main__":

@@ -7,8 +7,10 @@ dtype)`.  From that one tree we derive
   * `abstract_params`  — ShapeDtypeStructs (dry-run lowering, no allocation),
   * `logical_axes`     — the sharding tree consumed by parallel/sharding.py.
 
-All GEMMs go through `repro.kernels.ops.matmul` so the paper's Pallas kernel
-is a selectable backend (cfg.use_mesh_kernel); under pjit the default XLA
+All GEMMs go through the plan/execute API (`repro.kernels.api`): `gemm`
+builds a typed GemmSpec, `api.plan` resolves the backend against declared
+capabilities ONCE per logical shape (cfg.use_mesh_kernel selects the Pallas
+mesh kernel), and the cached plan executes per call; under pjit the XLA
 backend is used and sharding constraints carry the TP layout.
 """
 
@@ -21,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ops import matmul as _matmul
+from repro.kernels import api as _api
 
 __all__ = [
     "PSpec",
@@ -129,39 +131,41 @@ def gemm(
     activation: Optional[str] = None,
     residual: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Config-routed GEMM: XLA dot under pjit, Pallas mesh kernel if selected.
+    """Config-routed GEMM via plan/execute: XLA dot under pjit, Pallas mesh
+    kernel if selected.
 
     The epilogue (y = act(xW + bias) + residual) rides along: fused into the
     kernel's final-k flush on the Pallas path (cfg.fused_dense_epilogue, the
     A/B lever), applied as plain jnp ops otherwise — one call site, identical
     semantics either way.  Block shapes come from cfg.mesh_block_m/n/k when
-    set (> 0); otherwise `kernels/autotune.py` resolves them per GEMM shape.
+    set (> 0); otherwise `kernels/autotune.py` resolves them at plan time.
+    Plans are cached process-wide per (spec, backend) pair, so every
+    retrace/request with the same logical shape reuses the same executable.
     """
     backend = "pallas_mesh" if getattr(cfg, "use_mesh_kernel", False) else "xla"
-    blocks = {
-        name: size
-        for name, size in (
-            ("block_m", getattr(cfg, "mesh_block_m", 0)),
-            ("block_n", getattr(cfg, "mesh_block_n", 0)),
-            ("block_k", getattr(cfg, "mesh_block_k", 0)),
-        )
-        if size
-    }
+    blocks = (
+        getattr(cfg, "mesh_block_m", 0) or None,
+        getattr(cfg, "mesh_block_n", 0) or None,
+        getattr(cfg, "mesh_block_k", 0) or None,
+    )
     if backend != "xla" and not getattr(cfg, "fused_dense_epilogue", True):
-        from repro.kernels.ops import apply_epilogue
-
-        z = _matmul(x, w, backend=backend, out_dtype=jnp.float32, **blocks)
-        return apply_epilogue(z, bias, activation, residual).astype(x.dtype)
-    return _matmul(
+        spec = _api.GemmSpec.from_operands(
+            x, w, out_dtype=jnp.float32, blocks=blocks
+        )
+        z = _api.plan(spec, backend=backend)(x, w)
+        return _api.apply_epilogue(z, bias, activation, residual).astype(x.dtype)
+    spec = _api.GemmSpec.from_operands(
         x,
         w,
-        backend=backend,
+        epilogue=_api.Epilogue(
+            bias=bias is not None,
+            activation=activation,
+            residual=residual is not None,
+        ),
         out_dtype=x.dtype,
-        bias=bias,
-        activation=activation,
-        residual=residual,
-        **blocks,
+        blocks=blocks,
     )
+    return _api.plan(spec, backend=backend)(x, w, bias=bias, residual=residual)
 
 
 def dense(

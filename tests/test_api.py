@@ -1,0 +1,486 @@
+"""Plan/execute operator API: typed specs, the capability-based backend
+registry, the plan cache, the compat shim's deprecation path, and cross-
+backend error parity (DESIGN.md §8)."""
+
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import api, ops
+from repro.kernels import ref
+from repro.kernels.api import (
+    BackendCapabilities,
+    CapabilityError,
+    Epilogue,
+    GemmSpec,
+)
+from repro.kernels.mesh_matmul import mesh_matmul_pallas
+
+B = 8
+
+
+def _mk(shape, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32), dtype=dtype)
+
+
+@pytest.fixture(autouse=True)
+def _clean_dispatch_state():
+    """Each test sees a fresh plan cache, auto default, and warning slate."""
+    api.clear_plan_cache()
+    api.set_default(None)
+    ops._WARNED.clear()
+    saved_legacy = (ops._LEGACY_DEFAULT, ops._LEGACY_EPOCH)
+    yield
+    ops._LEGACY_DEFAULT, ops._LEGACY_EPOCH = saved_legacy
+    api.set_default(None)
+    api.clear_plan_cache()
+    ops._WARNED.clear()
+
+
+# --- GemmSpec / Epilogue ------------------------------------------------------
+
+
+def test_spec_from_operands_shapes_and_dtypes():
+    a = _mk((2, 3, 4 * B, 2 * B), 0, jnp.bfloat16)
+    w = _mk((2 * B, B), 1)
+    spec = GemmSpec.from_operands(a, w)
+    assert (spec.m, spec.k, spec.n) == (4 * B, 2 * B, B)
+    assert spec.batch == (2, 3) and not spec.batched_b
+    assert spec.dtype_a == "bfloat16" and spec.dtype_b == "float32"
+    assert spec.eff_m == 6 * 4 * B  # leading dims fold into M when b is 2D
+    b3 = _mk((2, 3, 2 * B, B), 2)
+    spec3 = GemmSpec.from_operands(a, b3)
+    assert spec3.batched_b and spec3.eff_m == 4 * B
+
+
+def test_spec_rejects_malformed_operands():
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        GemmSpec.from_operands(jnp.zeros((B, B)), jnp.zeros((2 * B, B)))
+    with pytest.raises(ValueError, match="batch dims mismatch"):
+        GemmSpec.from_operands(jnp.zeros((2, B, B)), jnp.zeros((3, B, B)))
+    with pytest.raises(ValueError, match="structure must be one of"):
+        GemmSpec(m=B, k=B, n=B, structure="diagonal")
+
+
+def test_epilogue_validates_activation_like_kernels():
+    with pytest.raises(ValueError, match="activation must be one of"):
+        Epilogue(activation="swishh")
+    assert Epilogue(activation="none").activation is None
+    assert Epilogue().is_identity and not Epilogue(bias=True).is_identity
+
+
+def test_spec_is_hashable_cache_key():
+    s1 = GemmSpec(m=B, k=B, n=B, blocks=(B, B, B))
+    s2 = GemmSpec(m=B, k=B, n=B, blocks=(B, B, B))
+    assert s1 == s2 and hash(s1) == hash(s2)
+    assert s1 != GemmSpec(m=B, k=B, n=B, blocks=(B, B, B), structure="scrambled")
+
+
+# --- registry -----------------------------------------------------------------
+
+
+def test_duplicate_registration_rejected():
+    def impl(plan, a, b, bias, residual):
+        return jnp.zeros((plan.spec.m, plan.spec.n))
+
+    api.register_backend("dup_test", impl, {"structures": {"general"}})
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            api.register_backend("dup_test", impl, {"structures": {"general"}})
+        api.register_backend(  # override is the explicit escape hatch
+            "dup_test", impl, {"structures": {"general"}}, override=True
+        )
+    finally:
+        api.unregister_backend("dup_test")
+    assert "dup_test" not in api.backend_names()
+
+
+def test_unknown_capability_rejected():
+    with pytest.raises(ValueError, match="unknown capabilities.*teleport"):
+        api.register_backend(
+            "bogus_caps",
+            lambda *a: None,
+            {"structures": {"general"}, "teleport": True},
+        )
+    with pytest.raises(ValueError, match="unknown structures"):
+        BackendCapabilities(structures=frozenset({"general", "diagonal"}))
+    assert "bogus_caps" not in api.backend_names()
+
+
+def test_plan_rejects_unknown_backend():
+    spec = GemmSpec(m=B, k=B, n=B)
+    with pytest.raises(ValueError, match="unknown backend"):
+        api.plan(spec, backend="not_a_backend")
+
+
+def test_capability_mismatch_rejected():
+    scrambled = GemmSpec(m=B, k=B, n=B, structure="scrambled", blocks=(B, B, B))
+    with pytest.raises(CapabilityError, match="does not support structure"):
+        api.plan(scrambled, backend="xla")
+
+    # a TPU-only double is rejected on this CPU host
+    api.register_backend(
+        "tpu_only_double",
+        lambda plan, a, b, bias, residual: a @ b,
+        {"structures": {"general"}, "interpret": False},
+    )
+    try:
+        with pytest.raises(CapabilityError, match="requires TPU"):
+            api.plan(GemmSpec(m=B, k=B, n=B), backend="tpu_only_double")
+    finally:
+        api.unregister_backend("tpu_only_double")
+
+    # batched operands against a 2D-only double
+    api.register_backend(
+        "no_batch_double",
+        lambda plan, a, b, bias, residual: a @ b,
+        {"structures": {"general"}, "batching": False},
+    )
+    try:
+        spec3 = GemmSpec(m=B, k=B, n=B, batch=(4,), batched_b=True)
+        with pytest.raises(CapabilityError, match="fully-batched"):
+            api.plan(spec3, backend="no_batch_double")
+    finally:
+        api.unregister_backend("no_batch_double")
+
+
+def test_test_double_registers_uniformly_and_executes():
+    calls = []
+
+    def impl(plan, a, b, bias, residual):
+        calls.append(plan.spec)
+        return jnp.full((plan.spec.m, plan.spec.n), 7.0)
+
+    api.register_backend("double", impl, {"structures": {"general"}})
+    try:
+        spec = GemmSpec(m=B, k=B, n=B)
+        p = api.plan(spec, backend="double")
+        out = p(jnp.zeros((B, B)), jnp.zeros((B, B)))
+        assert float(out[0, 0]) == 7.0 and calls == [spec]
+    finally:
+        api.unregister_backend("double")
+
+
+# --- backend choice / defaults ------------------------------------------------
+
+
+def test_auto_choice_prefers_xla_then_capable_backend():
+    assert api.plan(GemmSpec(m=B, k=B, n=B)).backend == "xla"
+    scrambled = GemmSpec(m=B, k=B, n=B, structure="scrambled", blocks=(B, B, B))
+    assert api.plan(scrambled).backend == "pallas_mesh"  # xla can't scramble
+
+
+def test_default_backend_context_manager():
+    spec = GemmSpec(m=B, k=B, n=B, blocks=(B, B, B))
+    with api.default_backend("pallas_mesh"):
+        assert api.plan(spec).backend == "pallas_mesh"
+    assert api.plan(spec).backend == "xla"
+    with pytest.raises(ValueError, match="unknown backend"):
+        with api.default_backend("nope"):
+            pass
+
+
+# --- plan cache ---------------------------------------------------------------
+
+
+def test_plan_reuse_returns_identical_callable():
+    spec = GemmSpec(m=B, k=B, n=B, blocks=(B, B, B))
+    p1 = api.plan(spec, backend="pallas_mesh")
+    p2 = api.plan(spec, backend="pallas_mesh")
+    p3 = api.plan(  # equal spec built independently
+        GemmSpec(m=B, k=B, n=B, blocks=(B, B, B)), backend="pallas_mesh"
+    )
+    assert p1 is p2 is p3
+    info = api.plan_cache_info()
+    assert info["size"] == 1 and info["hits"] == 2 and info["misses"] == 1
+    # a different structure is a different plan
+    assert api.plan(spec) is not p1  # auto-choice resolves to xla
+
+
+def test_plan_provenance_and_tables():
+    a = _mk((3 * B, 2 * B), 3)
+    b = _mk((2 * B, 3 * B), 4)
+    spec = GemmSpec.from_operands(a, b, structure="scrambled", blocks=(B, B, B))
+    p = api.plan(spec)
+    assert p.backend == "pallas_mesh" and p.blocks == (B, B, B)
+    assert p.flops == 2 * 3 * B * 2 * B * 3 * B
+    assert p.vmem_bytes and p.vmem_bytes > 0
+    assert p.sigma_table is not None and p.sigma_table.shape == (9,)
+    assert p.stagger_table is not None and p.stagger_table.shape == (3, 3)
+    json.dumps(p.describe())  # provenance is JSON-able as-is
+
+
+def test_plan_execution_matches_oracles_per_backend():
+    a = _mk((2 * B, 3 * B), 5)
+    b = _mk((3 * B, 2 * B), 6)
+    bias = _mk((2 * B,), 7)
+    spec = GemmSpec.from_operands(
+        a, b, epilogue=Epilogue(bias=True, activation="gelu"), blocks=(B, B, B)
+    )
+    want = None
+    for backend in ("xla", "ref", "pallas_mesh"):
+        got = api.plan(spec, backend=backend)(a, b, bias=bias)
+        if want is None:
+            want = got
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_scrambled_structure_bit_for_bit_vs_fused_kernel():
+    """structure='scrambled' reproduces the old pallas_mesh_scrambled output
+    exactly (same kernel, same opts — zero numeric drift)."""
+    g = 3
+    a = _mk((g * B, 2 * B), 8)
+    b = _mk((2 * B, g * B), 9)
+    want = mesh_matmul_pallas(
+        a, b, block_m=B, block_n=B, block_k=B, scramble_out=True, interpret=True
+    )
+    spec = GemmSpec.from_operands(a, b, structure="scrambled", blocks=(B, B, B))
+    got_plan = api.plan(spec)(a, b)
+    got_compat = ops.matmul(
+        a, b, backend="pallas_mesh_scrambled", block_m=B, block_n=B, block_k=B
+    )
+    np.testing.assert_array_equal(np.asarray(got_plan), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got_compat), np.asarray(want))
+    # and the ref backend agrees numerically (allclose, not bitwise)
+    got_ref = api.plan(spec, backend="ref")(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got_ref), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_scrambled_alignment_validated_at_plan_time():
+    spec = GemmSpec(m=B + 1, k=B, n=B + 1, structure="scrambled", blocks=(B, B, B))
+    with pytest.raises(ValueError, match="block-aligned"):
+        api.plan(spec)
+    rect = GemmSpec(m=2 * B, k=B, n=3 * B, structure="scrambled", blocks=(B, B, B))
+    with pytest.raises(ValueError, match="square block grid"):
+        api.plan(rect)
+
+
+def test_symmetric_structure_requires_square_and_executes():
+    with pytest.raises(ValueError, match="square product"):
+        api.plan(GemmSpec(m=B, k=B, n=2 * B, structure="symmetric"))
+    a = _mk((2 * B, B), 10)
+    spec = GemmSpec.from_operands(a, a.T, structure="symmetric", blocks=(B, B, B))
+    got = api.plan(spec, backend="pallas_mesh")(a, a.T)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(a @ a.T), rtol=1e-4, atol=1e-4
+    )
+
+
+# --- execution-time validation / error parity ---------------------------------
+
+
+def test_epilogue_contract_mismatch_rejected():
+    a = _mk((B, B), 11)
+    p = api.plan(GemmSpec.from_operands(a, a))
+    with pytest.raises(ValueError, match="built without bias"):
+        p(a, a, bias=jnp.zeros((B,)))
+    p2 = api.plan(GemmSpec.from_operands(a, a, epilogue=Epilogue(bias=True)))
+    with pytest.raises(ValueError, match="built with bias"):
+        p2(a, a)
+
+
+@pytest.mark.parametrize("backend", ["xla", "ref", "pallas_mesh"])
+def test_epilogue_shape_errors_identical_on_all_backends(backend):
+    """The xla path used to skip `_check_epilogue`'s shape validation — every
+    backend now rejects malformed bias/residual with the same error."""
+    a = _mk((2 * B, B), 12)
+    b = _mk((B, 2 * B), 13)
+    spec_bias = GemmSpec.from_operands(
+        a, b, epilogue=Epilogue(bias=True), blocks=(B, B, B)
+    )
+    with pytest.raises(ValueError) as bias_err:
+        api.plan(spec_bias, backend=backend)(a, b, bias=jnp.zeros((3,)))
+    assert str(bias_err.value) == f"bias must have shape ({2 * B},), got (3,)"
+
+    spec_res = GemmSpec.from_operands(
+        a, b, epilogue=Epilogue(residual=True), blocks=(B, B, B)
+    )
+    with pytest.raises(ValueError) as res_err:
+        api.plan(spec_res, backend=backend)(a, b, residual=jnp.zeros((B, B)))
+    assert (
+        str(res_err.value)
+        == f"residual must have shape ({2 * B}, {2 * B}), got ({B}, {B})"
+    )
+
+
+def test_operand_shape_mismatch_rejected():
+    a = _mk((B, B), 14)
+    p = api.plan(GemmSpec.from_operands(a, a))
+    with pytest.raises(ValueError, match="do not match plan spec"):
+        p(jnp.zeros((2 * B, B)), a)
+
+
+# --- compat shim / deprecation path -------------------------------------------
+
+
+def test_compat_deprecation_warning_fires_exactly_once():
+    a = _mk((B, B), 15)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ops.matmul(a, a, backend="xla")
+        ops.matmul(a, a, backend="xla")
+        ops.matmul(a, a, backend="pallas_mesh", block_m=B, block_n=B, block_k=B)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1 and "backend= strings" in str(dep[0].message)
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ops.matmul(a, a)  # no string backend: nothing to warn about
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+
+
+def test_set_default_backend_deprecated_but_functional():
+    a = _mk((B, B), 16)
+    try:
+        with pytest.deprecated_call():
+            ops.set_default_backend("pallas_mesh")
+        assert ops.get_default_backend() == "pallas_mesh"
+        out = ops.matmul(a, a, block_m=B, block_n=B, block_k=B)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(a @ a), rtol=1e-4, atol=1e-4
+        )
+        [entry] = api.plan_cache_info()["plans"]
+        assert entry["backend"] == "pallas_mesh"
+        with pytest.raises(ValueError, match="backend must be one of"):
+            ops.set_default_backend("bogus")
+    finally:
+        ops._LEGACY_DEFAULT = None
+        api.set_default(None)
+
+
+def test_scoped_default_backend_reaches_compat_shim():
+    """api.default_backend(...) — the documented replacement for the global
+    setter — must steer legacy ops.matmul call sites too."""
+    a = _mk((B, B), 20)
+    with api.default_backend("pallas_mesh"):
+        ops.matmul(a, a, block_m=B, block_n=B, block_k=B)
+    [entry] = api.plan_cache_info()["plans"]
+    assert entry["backend"] == "pallas_mesh"
+    assert ops.get_default_backend() == "xla"  # scope ended
+
+
+def test_invalid_backend_string_does_not_consume_warning():
+    a = _mk((B, B), 21)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        with pytest.raises(ValueError, match="backend must be one of"):
+            ops.matmul(a, a, backend="typo")
+        ops.matmul(a, a, backend="xla")  # the one-shot warning still fires
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+
+
+def test_scoped_default_supersedes_stale_legacy_scrambled_default():
+    """A newer api default (scope or set_default) wins over the legacy
+    setter's string — including its scrambled structure."""
+    g = 3
+    a = _mk((g * B, g * B), 22)
+    try:
+        with pytest.deprecated_call():
+            ops.set_default_backend("pallas_mesh_scrambled")
+        with api.default_backend("pallas_mesh"):
+            got = ops.matmul(a, a, block_m=B, block_n=B, block_k=B)
+        np.testing.assert_allclose(  # plain product, NOT scrambled
+            np.asarray(got), np.asarray(a @ a), rtol=1e-4, atol=1e-4
+        )
+        api.set_default(None)  # explicit auto-choice also supersedes
+        assert ops.get_default_backend() == "xla"
+    finally:
+        ops._LEGACY_DEFAULT = None
+        ops._LEGACY_EPOCH = None
+        api.set_default(None)
+
+
+def test_plan_call_rejects_dtype_mismatch():
+    a = _mk((B, B), 23)
+    p = api.plan(GemmSpec.from_operands(a, a))
+    with pytest.raises(ValueError, match="dtypes .* do not match plan spec"):
+        p(a.astype(jnp.bfloat16), a.astype(jnp.bfloat16))
+
+
+def test_spec_rejects_malformed_blocks_tuple():
+    with pytest.raises(ValueError, match="bm, bn, bk"):
+        GemmSpec(m=B, k=B, n=B, blocks=(B, B))
+
+
+def test_reregistration_evicts_only_that_backends_plans():
+    spec = GemmSpec(m=B, k=B, n=B)
+    p_xla = api.plan(spec, backend="xla")
+    api.register_backend(
+        "evict_double",
+        lambda plan, a, b, bias, residual: a @ b,
+        {"structures": {"general"}},
+    )
+    try:
+        p_d1 = api.plan(spec, backend="evict_double")
+        api.register_backend(
+            "evict_double",
+            lambda plan, a, b, bias, residual: a @ b + 1,
+            {"structures": {"general"}},
+            override=True,
+        )
+        assert api.plan(spec, backend="xla") is p_xla  # untouched backend kept
+        assert api.plan(spec, backend="evict_double") is not p_d1  # stale gone
+        sizes = api.plan_cache_info()["size"]
+        assert sizes == 2  # no stranded entries from the old registration
+    finally:
+        api.unregister_backend("evict_double")
+    assert api.plan_cache_info()["size"] == 1  # double's plan evicted with it
+
+
+def test_legacy_scrambled_default_backend_still_routes():
+    g = 3
+    a = _mk((g * B, g * B), 17)
+    try:
+        with pytest.deprecated_call():
+            ops.set_default_backend("pallas_mesh_scrambled")
+        got = ops.matmul(a, a, block_m=B, block_n=B, block_k=B)
+        want = ref.scramble_blocks_ref(
+            ref.matmul_ref(a, a), block_m=B, block_n=B
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+    finally:
+        ops._LEGACY_DEFAULT = None
+        api.set_default(None)
+
+
+def test_no_string_dispatch_tuple_left():
+    """Acceptance: the hard-coded _VALID tuple is gone — backend names come
+    from the registry."""
+    assert not hasattr(ops, "_VALID")
+    assert set(api.backend_names()) >= {"xla", "pallas_mesh", "ref"}
+
+
+# --- layers integration: one plan per (spec, backend) pair --------------------
+
+
+def test_layers_gemm_plans_once_per_spec():
+    from repro.models.layers import gemm
+
+    class Cfg:
+        use_mesh_kernel = True
+        mesh_block_m = B
+        mesh_block_n = B
+        mesh_block_k = B
+        fused_dense_epilogue = True
+
+    x = _mk((4, 2 * B), 18)
+    w = _mk((2 * B, B), 19)
+    y1 = gemm(x, w, Cfg(), activation="silu")
+    size_after_first = api.plan_cache_info()["size"]
+    y2 = gemm(x, w, Cfg(), activation="silu")
+    info = api.plan_cache_info()
+    assert info["size"] == size_after_first == 1  # one plan, reused
+    assert info["hits"] >= 1
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=0, atol=0)
