@@ -1,0 +1,99 @@
+"""ShardedPlan collective-schedule benchmark (ISSUE 4).
+
+In an 8-virtual-CPU-device subprocess: plan one GEMM under every collective
+schedule and measure wall time per step next to the plan's own bytes-moved
+provenance — the cross-PR artifact (`BENCH_kernels.json` "sharded" section)
+that tracks whether schedule choice and the comm model stay sane.  The
+unsharded plan runs as the baseline row.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_PROG = textwrap.dedent(
+    """
+    import json, time
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.kernels import api
+    from repro.launch.mesh import make_local_mesh
+
+    M = K = N = 512
+    STEPS = 20
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+
+    mesh1d = make_local_mesh((8,), ("x",))
+    mesh2d = make_local_mesh((4, 2), ("x", "y"))
+    cases = [
+        ("unsharded", None, None),
+        ("replicated_mn", mesh2d, api.ShardSpec.from_mesh(mesh2d, m="x", n="y")),
+        ("allgather_a", mesh1d,
+         api.ShardSpec.from_mesh(mesh1d, m="x", schedule="allgather_a")),
+        ("reduce_scatter_k", mesh1d,
+         api.ShardSpec.from_mesh(mesh1d, k="x", schedule="reduce_scatter_k")),
+        ("ring_k", mesh1d,
+         api.ShardSpec.from_mesh(mesh1d, k="x", schedule="ring_k")),
+    ]
+    rows = []
+    for name, mesh, shard in cases:
+        spec = api.GemmSpec.from_operands(a, b, shard=shard)
+        p = api.plan(spec, mesh=mesh)
+        p(a, b).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(STEPS):
+            out = p(a, b)
+        out.block_until_ready()
+        ms = (time.perf_counter() - t0) / STEPS * 1e3
+        sh = p.describe().get("sharding") or {}
+        rows.append({
+            "case": name,
+            "schedule": sh.get("schedule", "-"),
+            "bytes_moved": sh.get("bytes_moved", 0),
+            "collective_phases": sh.get("collective_phases", 0),
+            "per_shard_flops": sh.get("per_shard_flops", p.flops),
+            "ms_per_step": round(ms, 3),
+        })
+    print("SHARDED_JSON " + json.dumps({"mkn": f"{M}x{K}x{N}", "rows": rows}))
+    """
+)
+
+
+def _run_subprocess() -> dict:
+    from repro.launch.mesh import forced_device_env
+
+    env = forced_device_env(8)
+    out = subprocess.run(
+        [sys.executable, "-c", _PROG], capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=560,
+    )
+    if out.returncode != 0:
+        return {"error": out.stderr[-500:]}
+    for line in out.stdout.splitlines():
+        if line.startswith("SHARDED_JSON "):
+            return json.loads(line[len("SHARDED_JSON "):])
+    return {"error": "no SHARDED_JSON line in subprocess output"}
+
+
+def run(as_dict: bool = False):
+    print("# ShardedPlan collective schedules (8 virtual CPU devices, 512^3 GEMM)")
+    doc = _run_subprocess()
+    if "error" in doc:
+        # don't fail the whole bench suite on subprocess quirks
+        print(f"subprocess failed: {doc['error']}")
+        return doc if as_dict else True
+    print("case,schedule,bytes_moved,phases,ms_per_step")
+    for r in doc["rows"]:
+        print(
+            f"{r['case']},{r['schedule']},{r['bytes_moved']},"
+            f"{r['collective_phases']},{r['ms_per_step']}"
+        )
+    return doc if as_dict else True
+
+
+if __name__ == "__main__":
+    run()

@@ -8,6 +8,7 @@ Sections:
   symmetric    symmetric-product early readout (<= n+1+n/2)
   kernels      mesh-matmul BlockSpec structure + allclose gate + GEMM context
   dispatch     plan/execute dispatch overhead (eager matmul vs pre-built Plan)
+  sharded      ShardedPlan collective schedules: bytes-moved + step time
   distributed  Cannon phases, pipeline bubbles, ring-overlap wall-time
   train        short real training run (loss trajectory) on the demo config
   roofline     renders the dry-run roofline table (artifacts/pod16x16)
@@ -25,6 +26,7 @@ from benchmarks import (
     bench_kernels,
     bench_roofline,
     bench_scramble,
+    bench_sharded,
     bench_stepcounts,
     bench_symmetric,
 )
@@ -56,6 +58,7 @@ SECTIONS = {
     "symmetric": bench_symmetric.run,
     "kernels": bench_kernels.run,
     "dispatch": bench_dispatch.run,
+    "sharded": bench_sharded.run,
     "distributed": bench_distributed.run,
     "train": bench_train,
     "roofline": bench_roofline.run,
@@ -106,9 +109,11 @@ def main() -> None:
         try:
             if name == "kernels" and args.json:
                 payload = bench_kernels.run(as_dict=True)
-                # dispatch-overhead microbench rides along in the same JSON so
-                # BENCH_kernels.json tracks the plan-cache win across PRs
+                # dispatch-overhead + sharded-schedule microbenches ride along
+                # in the same JSON so BENCH_kernels.json tracks the plan-cache
+                # win and per-schedule comm cost across PRs
                 payload["dispatch"] = bench_dispatch.run(as_dict=True)
+                payload["sharded"] = bench_sharded.run(as_dict=True)
                 _write_kernels_json(payload, time.perf_counter() - t0, args.json_path)
             else:
                 SECTIONS[name]()

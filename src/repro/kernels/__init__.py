@@ -18,6 +18,8 @@ from repro.kernels.api import (
     Epilogue,
     GemmSpec,
     Plan,
+    ShardedPlan,
+    ShardSpec,
     default_backend,
     plan,
     register_backend,
@@ -34,6 +36,8 @@ __all__ = [
     "Epilogue",
     "GemmSpec",
     "Plan",
+    "ShardSpec",
+    "ShardedPlan",
     "default_backend",
     "get_default_backend",
     "matmul",

@@ -16,9 +16,19 @@ the *regime* the paper's array supports (general 2n-1-step product, the
 3n/2+1 symmetric readout, the scrambling mode) is a property of the problem,
 not of the kernel that happens to run it.  Backends declare which structures
 (and which other capabilities: fully-batched grids, fused epilogues,
-off-TPU interpret execution, autotuned blocks) they support via
-`register_backend`, so ref/XLA/Pallas implementations — and test doubles —
-register uniformly; `plan` picks a capable backend instead of string-matching.
+off-TPU interpret execution, autotuned blocks, device-mesh sharding) they
+support via `register_backend`, so ref/XLA/Pallas implementations — and test
+doubles — register uniformly; `plan` picks a capable backend instead of
+string-matching.
+
+The API is sharding-aware end to end (DESIGN.md §9): attach a frozen
+`ShardSpec` (device-mesh axes + logical partition of M/K/N/batch, derivable
+from `parallel.sharding.ShardingRules`) and `plan(spec, mesh=mesh)` returns a
+`ShardedPlan` — the same per-shard Plan lowered through `shard_map` with a
+collective schedule (`replicated` | `allgather_a` | `reduce_scatter_k` |
+`ring_k`) fused around the kernel call via `parallel/collectives.py` and
+`parallel/systolic.py`.  An unsharded spec is just the size-1-axes case of
+the same planner path — there is one planner, not two.
 
 `repro.kernels.ops.matmul` remains as a thin compat shim over this module.
 """
@@ -34,6 +44,7 @@ from typing import Any, Callable, Dict, FrozenSet, List, Mapping, Optional, Tupl
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import autotune as _autotune
 from repro.kernels import ref
@@ -45,12 +56,15 @@ from repro.kernels.mesh_matmul import (
 )
 
 __all__ = [
+    "SCHEDULES",
     "STRUCTURES",
     "BackendCapabilities",
     "CapabilityError",
     "Epilogue",
     "GemmSpec",
     "Plan",
+    "ShardSpec",
+    "ShardedPlan",
     "apply_epilogue",
     "backend_names",
     "clear_plan_cache",
@@ -65,6 +79,21 @@ __all__ = [
 ]
 
 STRUCTURES = ("general", "symmetric", "scrambled")
+
+# Collective schedules a ShardedPlan can lower to (DESIGN.md §9):
+#   replicated        no collective — M/N/batch partitions are purely local
+#                     (each device owns its C tile; all-None axes = the fully
+#                     replicated degenerate case unsharded specs route through)
+#   allgather_a       A row-sharded on M; the all-gather is fused into the ring
+#                     of per-shard kernel calls (collectives.ring_allgather_matmul);
+#                     output replicated
+#   reduce_scatter_k  A/B sharded on K; partial products ring-reduced so each
+#                     device ends with its M/p row slice
+#                     (collectives.matmul_ring_reducescatter)
+#   ring_k            A/B sharded on K; the paper's 2n-1 staggered feed as p
+#                     accumulator wavefronts ppermuting around the ring
+#                     (systolic.ring_systolic_kpass); output replicated
+SCHEDULES = ("replicated", "allgather_a", "reduce_scatter_k", "ring_k")
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +127,153 @@ class Epilogue:
         return not (self.bias or self.residual) and self.activation is None
 
 
+# Physical mesh axes naming a partition: a single axis name, or (for the
+# no-collective dims of the replicated schedule) a tuple of axis names.
+Axes = Union[str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Device-mesh partition of one GEMM (DESIGN.md §9).
+
+    `mesh_axes` pins the (name, size) layout of the device mesh the spec was
+    built for — the spec stays hashable (it is part of the plan-cache key)
+    and `plan(spec, mesh=...)` verifies the live mesh matches.  The four
+    axis fields name which mesh axis partitions each LOGICAL dim of
+    (batch..., M, K) @ (K, N); None leaves that dim whole.  `schedule` pins a
+    collective schedule from SCHEDULES, or "auto" to let the planner choose
+    (K sharded -> reduce_scatter_k when M divides the axis, else ring_k;
+    otherwise the no-collective replicated schedule).
+
+    `axis_k` must be a single axis name — the K collectives are 1D rings.
+    `axis_m`/`axis_n`/`axis_batch` may be axis tuples under the replicated
+    schedule, where they only slice the local tile.  A ShardSpec whose axes
+    are all None/size-1 (`ShardSpec.unsharded`) routes through the identical
+    ShardedPlan path and reproduces the unsharded Plan bit for bit.
+    """
+
+    mesh_axes: Tuple[Tuple[str, int], ...]
+    axis_m: Optional[Axes] = None
+    axis_k: Optional[str] = None
+    axis_n: Optional[Axes] = None
+    axis_batch: Optional[Axes] = None
+    schedule: str = "auto"
+
+    def __post_init__(self):
+        object.__setattr__(
+            self,
+            "mesh_axes",
+            tuple((str(n), int(s)) for n, s in self.mesh_axes),
+        )
+        names = [n for n, _ in self.mesh_axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate mesh axis names in {self.mesh_axes}")
+        if self.schedule not in ("auto",) + SCHEDULES:
+            raise ValueError(
+                f"schedule must be 'auto' or one of {SCHEDULES},"
+                f" got {self.schedule!r}"
+            )
+        seen: List[str] = []
+        for field in ("axis_m", "axis_k", "axis_n", "axis_batch"):
+            v = getattr(self, field)
+            if isinstance(v, list):
+                v = tuple(v)
+            if isinstance(v, tuple) and len(v) == 1:
+                v = v[0]
+            if field == "axis_k" and v is not None and not isinstance(v, str):
+                raise ValueError(
+                    f"axis_k must be a single mesh axis name (the K"
+                    f" collectives are 1D rings), got {self.axis_k!r}"
+                )
+            object.__setattr__(self, field, v)
+            for nm in (v,) if isinstance(v, str) else (v or ()):
+                if nm not in names:
+                    raise ValueError(
+                        f"{field}={nm!r} is not a mesh axis; mesh has {names}"
+                    )
+                if nm in seen:
+                    raise ValueError(
+                        f"mesh axis {nm!r} partitions more than one GEMM dim"
+                    )
+                seen.append(nm)
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def from_mesh(
+        cls,
+        mesh: Mesh,
+        *,
+        m: Optional[Axes] = None,
+        k: Optional[str] = None,
+        n: Optional[Axes] = None,
+        batch: Optional[Axes] = None,
+        schedule: str = "auto",
+    ) -> "ShardSpec":
+        """Partition over a live device mesh by PHYSICAL axis names."""
+        return cls(
+            mesh_axes=tuple((str(a), int(s)) for a, s in mesh.shape.items()),
+            axis_m=m,
+            axis_k=k,
+            axis_n=n,
+            axis_batch=batch,
+            schedule=schedule,
+        )
+
+    @classmethod
+    def from_rules(
+        cls,
+        mesh: Mesh,
+        rules,
+        *,
+        m: Optional[str] = None,
+        k: Optional[str] = None,
+        n: Optional[str] = None,
+        batch: Optional[str] = None,
+        schedule: str = "auto",
+    ) -> "ShardSpec":
+        """Partition by LOGICAL axis names (e.g. m='batch', n='mlp') mapped
+        through a `parallel.sharding.ShardingRules` table; rule axes the mesh
+        doesn't carry are dropped, exactly as in `named_sharding`."""
+        from repro.parallel.sharding import _axes_on_mesh
+
+        def phys(logical):
+            return None if logical is None else _axes_on_mesh(mesh, rules.get(logical))
+
+        return cls.from_mesh(
+            mesh,
+            m=phys(m),
+            k=phys(k),
+            n=phys(n),
+            batch=phys(batch),
+            schedule=schedule,
+        )
+
+    @classmethod
+    def unsharded(cls, mesh: Mesh) -> "ShardSpec":
+        """All dims whole: the degenerate ShardSpec that routes an unsharded
+        product through the same ShardedPlan planner path."""
+        return cls.from_mesh(mesh)
+
+    # -- derived -------------------------------------------------------------
+
+    def axis_size(self, axes: Optional[Axes]) -> int:
+        """Product of mesh-axis sizes a partition maps to (1 for None)."""
+        sizes = dict(self.mesh_axes)
+        out = 1
+        for nm in (axes,) if isinstance(axes, str) else (axes or ()):
+            out *= sizes[nm]
+        return out
+
+    @property
+    def is_trivial(self) -> bool:
+        """True when every partition has size 1 (numerically unsharded)."""
+        return all(
+            self.axis_size(a) == 1
+            for a in (self.axis_m, self.axis_k, self.axis_n, self.axis_batch)
+        )
+
+
 def _dtype_name(dt) -> str:
     return jnp.dtype(dt).name
 
@@ -115,8 +291,10 @@ class GemmSpec:
                  old `pallas_mesh_scrambled` pseudo-backend)
 
     `blocks` is an optional (bm, bn, bk) override; entries left None are
-    resolved by the autotuner at plan time.  Hashable and frozen — specs are
-    the plan-cache key.
+    resolved by the autotuner at plan time.  `shard` attaches a device-mesh
+    partition (ShardSpec): `plan(spec, mesh=mesh)` then returns a ShardedPlan
+    lowering the per-shard product through shard_map with a collective
+    schedule.  Hashable and frozen — specs are the plan-cache key.
     """
 
     m: int
@@ -131,6 +309,7 @@ class GemmSpec:
     epilogue: Epilogue = Epilogue()
     blocks: Optional[Tuple[Optional[int], Optional[int], Optional[int]]] = None
     stagger: bool = True
+    shard: Optional[ShardSpec] = None
 
     def __post_init__(self):
         if self.structure not in STRUCTURES:
@@ -141,6 +320,10 @@ class GemmSpec:
             raise ValueError(f"dims must be positive, got {(self.m, self.k, self.n)}")
         if self.batched_b and not self.batch:
             raise ValueError("batched_b requires leading batch dims")
+        if self.shard is not None and not isinstance(self.shard, ShardSpec):
+            raise TypeError(
+                f"shard must be a ShardSpec, got {type(self.shard).__name__}"
+            )
         object.__setattr__(self, "batch", tuple(int(d) for d in self.batch))
         object.__setattr__(self, "dtype_a", _dtype_name(self.dtype_a))
         object.__setattr__(self, "dtype_b", _dtype_name(self.dtype_b))
@@ -165,6 +348,7 @@ class GemmSpec:
         out_dtype=None,
         blocks=None,
         stagger: bool = True,
+        shard: Optional[ShardSpec] = None,
     ) -> "GemmSpec":
         """Spec for concrete (or abstract) operands; leading dims of `a` become
         the batch, shared with `b` when `b` carries the same leading dims."""
@@ -188,6 +372,7 @@ class GemmSpec:
             epilogue=epilogue or Epilogue(),
             blocks=blocks,
             stagger=stagger,
+            shard=shard,
         )
 
     # -- derived quantities used at plan time --------------------------------
@@ -229,6 +414,8 @@ class BackendCapabilities:
     epilogue_fusion   the epilogue runs inside the kernel (provenance only)
     interpret         executes off-TPU (natively or via Pallas interpret mode)
     autotune          consumes autotuned (bm, bn, bk) block shapes
+    sharding          per-shard kernel composes under shard_map, so specs
+                      with a ShardSpec can lower through a ShardedPlan
     """
 
     structures: FrozenSet[str] = frozenset({"general"})
@@ -237,6 +424,7 @@ class BackendCapabilities:
     epilogue_fusion: bool = False
     interpret: bool = True
     autotune: bool = False
+    sharding: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "structures", frozenset(self.structures))
@@ -344,6 +532,11 @@ def _check_capabilities(spec: GemmSpec, be: _Backend) -> Optional[str]:
         )
     if spec.batched_b and not caps.batching:
         return f"backend {be.name!r} does not support fully-batched operands"
+    if spec.shard is not None and not caps.sharding:
+        return (
+            f"backend {be.name!r} does not support device-mesh sharded specs"
+            f" (no 'sharding' capability)"
+        )
     if not spec.epilogue.is_identity and not caps.epilogue:
         return f"backend {be.name!r} does not support the fused-epilogue contract"
     if not _on_tpu() and not caps.interpret:
@@ -609,7 +802,11 @@ class Plan:
             "backend": self.backend,
             "structure": self.spec.structure,
             "mkn": f"{self.spec.eff_m}x{self.spec.k}x{self.spec.n}",
+            "dtypes": [self.spec.dtype_a, self.spec.dtype_b],
             "batch": list(self.spec.batch),
+            # eff_m in "mkn" folds the batch only when b is 2D; batched_b
+            # consumers (roofline) must scale per-element byte counts by batch
+            "batched_b": self.spec.batched_b,
             "blocks": list(self.blocks) if self.blocks else None,
             "epilogue": {
                 "bias": self.spec.epilogue.bias,
@@ -675,6 +872,60 @@ def _check_epilogue_shapes(bias, residual, spec: GemmSpec) -> None:
         )
 
 
+@dataclasses.dataclass
+class ShardedPlan(Plan):
+    """A Plan lowered over a device mesh (DESIGN.md §9).
+
+    Built by `plan(spec, mesh=...)` for a spec carrying a ShardSpec: the
+    per-shard product is the ordinary single-device Plan (`local`, built by
+    the same planner), wrapped in `shard_map` with the chosen collective
+    schedule fused around the kernel call.  Operands/results are GLOBAL
+    arrays with the spec's logical shapes; `__call__` validates them exactly
+    like an unsharded Plan.  The epilogue is applied after the collective
+    (act(sum) != sum(act) under a K split), so it is never kernel-fused here.
+
+    Extra provenance: the collective `schedule`, per-shard FLOPs/VMEM via
+    `local`, and `bytes_moved` — collective link bytes per device per call —
+    so roofline/serving tooling can report communication cost.
+    """
+
+    mesh: Any = None
+    schedule: str = "replicated"
+    local: Optional[Plan] = dataclasses.field(default=None, repr=False)
+    bytes_moved: int = 0
+    collective_phases: int = 0
+    # Ring-schedule devices run the local kernel once per ring step, so the
+    # per-DEVICE work is local.flops x this (allgather_a/reduce_scatter_k: p).
+    kernel_invocations: int = 1
+
+    def describe(self) -> Dict[str, Any]:
+        d = super().describe()
+        shard = self.spec.shard
+        d["fused_epilogue"] = False  # applied post-collective, never in-kernel
+        d["sharding"] = {
+            "mesh": [[n, s] for n, s in shard.mesh_axes],
+            "axes": {
+                "m": shard.axis_m,
+                "k": shard.axis_k,
+                "n": shard.axis_n,
+                "batch": shard.axis_batch,
+            },
+            "schedule": self.schedule,
+            "collective_phases": self.collective_phases,
+            "bytes_moved": self.bytes_moved,
+            "kernel_invocations": self.kernel_invocations,
+            "per_shard_mkn": [
+                self.local.spec.eff_m,
+                self.local.spec.k,
+                self.local.spec.n,
+            ],
+            "per_shard_batch": list(self.local.spec.batch),
+            "per_shard_flops": self.local.flops * self.kernel_invocations,
+            "per_shard_vmem_bytes": self.local.vmem_bytes,
+        }
+        return d
+
+
 # -- built-in backend implementations ----------------------------------------
 
 
@@ -733,6 +984,7 @@ register_backend(
         epilogue_fusion=False,  # XLA may fuse, but it is not contractual
         interpret=True,  # native everywhere
         autotune=False,
+        sharding=True,
     ),
 )
 register_backend(
@@ -745,6 +997,7 @@ register_backend(
         epilogue_fusion=True,
         interpret=True,  # Pallas interpret mode off-TPU
         autotune=True,
+        sharding=True,
     ),
 )
 register_backend(
@@ -757,6 +1010,7 @@ register_backend(
         epilogue_fusion=False,
         interpret=True,
         autotune=False,
+        sharding=True,
     ),
 )
 
@@ -766,19 +1020,34 @@ register_backend(
 # ---------------------------------------------------------------------------
 
 
-def plan(spec: GemmSpec, *, backend: Optional[str] = None) -> Plan:
+def plan(
+    spec: GemmSpec, *, backend: Optional[str] = None, mesh: Optional[Mesh] = None
+) -> Plan:
     """Validate `spec` against backend capabilities and return the cached,
     reusable executable for it.
 
-    Resolution happens ONCE per (spec, backend) pair per platform: capability
-    checks, autotuned block shapes, σ/stagger tables, and the jitted executor
-    are all fixed here; repeated calls return the *identical* Plan object.
-    An explicit `backend` is validated strictly (CapabilityError on mismatch);
-    otherwise the first capable backend is chosen (pinned default → xla →
-    pallas_mesh → registration order).
+    Resolution happens ONCE per (spec, backend, mesh) triple per platform:
+    capability checks, autotuned block shapes, σ/stagger tables, collective
+    schedule, and the jitted executor are all fixed here; repeated calls
+    return the *identical* Plan object.  An explicit `backend` is validated
+    strictly (CapabilityError on mismatch); otherwise the first capable
+    backend is chosen (pinned default → xla → pallas_mesh → registration
+    order).  A spec carrying a ShardSpec requires the live device `mesh` and
+    returns a ShardedPlan; equal meshes (same devices + axis names) key the
+    same cache entry, different meshes plan separately.
     """
     if not isinstance(spec, GemmSpec):
         raise TypeError(f"plan() takes a GemmSpec, got {type(spec).__name__}")
+    if spec.shard is not None and mesh is None:
+        raise ValueError(
+            "spec carries a ShardSpec; pass the device mesh:"
+            " plan(spec, mesh=mesh)"
+        )
+    if spec.shard is None and mesh is not None:
+        raise ValueError(
+            "mesh= given but spec has no ShardSpec; attach one, e.g."
+            " GemmSpec(..., shard=ShardSpec.from_mesh(mesh, ...))"
+        )
     if backend is not None:
         be = _require_backend(backend)
         reason = _check_capabilities(spec, be)
@@ -787,14 +1056,14 @@ def plan(spec: GemmSpec, *, backend: Optional[str] = None) -> Plan:
     else:
         be = _choose_backend(spec)
 
-    key = (spec, be.name, jax.default_backend())
+    key = (spec, be.name, jax.default_backend(), mesh)
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
         _PLAN_STATS["hits"] += 1
         return cached
     _PLAN_STATS["misses"] += 1
 
-    p = _build_plan(spec, be)
+    p = _build_plan(spec, be) if mesh is None else _build_sharded_plan(spec, be, mesh)
     _PLAN_CACHE[key] = p
     return p
 
@@ -872,6 +1141,270 @@ def _build_plan(spec: GemmSpec, be: _Backend) -> Plan:
     return p
 
 
+# ---------------------------------------------------------------------------
+# Sharded planning (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
+    """Choose/validate the collective schedule for `spec.shard` and derive
+    (schedule, per-shard local spec, bytes_moved per device per call,
+    collective phase count).
+
+    The local spec is the SAME GemmSpec type the unsharded planner consumes —
+    epilogue stripped (applied post-collective) and accumulation pinned to
+    f32, structure folded to 'general' (per-shard tiles are rectangular).
+    """
+    shard = spec.shard
+    if spec.structure == "scrambled":
+        raise ValueError(
+            "structure='scrambled' does not compose with a ShardSpec: the"
+            " σ arrangement is defined on the global block grid"
+        )
+    if spec.structure == "symmetric" and spec.m != spec.n:
+        raise ValueError(
+            f"structure='symmetric' requires a square product, got "
+            f"{spec.m}x{spec.n}"
+        )
+    pm = shard.axis_size(shard.axis_m)
+    pk = shard.axis_size(shard.axis_k)
+    pn = shard.axis_size(shard.axis_n)
+    pb = shard.axis_size(shard.axis_batch)
+    eff_m = spec.eff_m
+
+    sched = shard.schedule
+    if sched == "auto":
+        if pk > 1:
+            sched = "reduce_scatter_k" if eff_m % pk == 0 else "ring_k"
+        else:
+            sched = "replicated"
+
+    def div(what: str, dim: int, axes, p: int) -> int:
+        if dim % p:
+            raise ValueError(
+                f"{what}={dim} is not divisible by mesh axes {axes!r}"
+                f" (size {p}) required by schedule {sched!r}"
+                f" on mesh {shard.mesh_axes}"
+            )
+        return dim // p
+
+    if spec.batched_b and sched != "replicated":
+        raise ValueError(
+            f"schedule {sched!r} does not support fully-batched operands;"
+            " use the replicated schedule (batch/M/N partitions are local)"
+        )
+    if shard.axis_batch is not None and not spec.batch:
+        raise ValueError("axis_batch given but the spec has no batch dims")
+    if not spec.batched_b and pb > 1:
+        raise ValueError(
+            "axis_batch partitions the leading dim of a fully-batched"
+            " product; with 2D b the batch folds into M — shard axis_m"
+            " instead"
+        )
+
+    lb: Tuple[int, ...] = spec.batch
+    if sched == "replicated":
+        if pk > 1:
+            raise ValueError(
+                "schedule 'replicated' cannot shard K (a K partition needs a"
+                " collective; use 'reduce_scatter_k' or 'ring_k')"
+            )
+        if spec.batched_b:
+            nb = math.prod(spec.batch)
+            lb = (div("batch", nb, shard.axis_batch, pb),)
+            lm = div("M", spec.m, shard.axis_m, pm)
+        else:
+            lm = div("M", eff_m, shard.axis_m, pm)
+        lk, ln = spec.k, div("N", spec.n, shard.axis_n, pn)
+        bytes_moved, phases = 0, 0
+    elif sched == "allgather_a":
+        if not isinstance(shard.axis_m, str):
+            raise ValueError(
+                "schedule 'allgather_a' needs a single mesh axis on M"
+                f" (axis_m={shard.axis_m!r}) — the gather is a 1D ring"
+            )
+        if pk > 1 or pn > 1:
+            raise ValueError(
+                "schedule 'allgather_a' shards only M; drop axis_k/axis_n"
+            )
+        lm = div("M", eff_m, shard.axis_m, pm)
+        lk, ln = spec.k, spec.n
+        bytes_moved = (pm - 1) * lm * spec.k * jnp.dtype(spec.dtype_a).itemsize
+        phases = pm - 1
+    elif sched in ("reduce_scatter_k", "ring_k"):
+        if shard.axis_k is None:
+            raise ValueError(f"schedule {sched!r} requires axis_k")
+        if pm > 1 or pn > 1:
+            if shard.schedule == "auto":
+                raise ValueError(
+                    "no collective schedule combines a K partition with an"
+                    " M/N partition; shard K alone (reduce_scatter_k /"
+                    " ring_k) or drop axis_k"
+                )
+            raise ValueError(
+                f"schedule {sched!r} shards only K; drop axis_m/axis_n"
+            )
+        lk = div("K", spec.k, shard.axis_k, pk)
+        ln = spec.n
+        if sched == "reduce_scatter_k":
+            lm = div("M", eff_m, shard.axis_k, pk)
+            # f32 accumulator row-chunks hop the ring p-1 times
+            bytes_moved = (pk - 1) * lm * spec.n * 4
+        else:
+            lm = eff_m
+            # full f32 accumulator wavefronts hop the ring p-1 times
+            bytes_moved = (pk - 1) * eff_m * spec.n * 4
+        phases = pk - 1
+    else:  # pragma: no cover — ShardSpec.__post_init__ rejects unknown names
+        raise ValueError(f"unknown schedule {sched!r}")
+
+    local = dataclasses.replace(
+        spec,
+        m=lm,
+        k=lk,
+        n=ln,
+        batch=lb if spec.batched_b else (),
+        batched_b=spec.batched_b,
+        structure="general",
+        epilogue=Epilogue(),
+        out_dtype="float32",
+        shard=None,
+    )
+    return sched, local, bytes_moved, phases
+
+
+def _sharded_executor(
+    spec: GemmSpec, sched: str, mesh: Mesh, local_plan: Plan
+) -> Callable:
+    """The jitted global-operand executor: shard_map(collective ∘ per-shard
+    kernel) with batch folding/unfolding around it."""
+    from repro.parallel.collectives import (
+        matmul_ring_reducescatter,
+        ring_allgather_matmul,
+    )
+    from repro.parallel.sharding import shard_map as _shard_map
+    from repro.parallel.systolic import ring_systolic_kpass
+
+    shard = spec.shard
+    epi = spec.epilogue
+    act = epi.activation
+    out_dt = jnp.dtype(spec.resolved_out_dtype())
+    am, ak, an, ab = shard.axis_m, shard.axis_k, shard.axis_n, shard.axis_batch
+
+    def local_mm(x, y):
+        return local_plan._fn(x, y, None, None)
+
+    if spec.batched_b:  # replicated schedule only (validated upstream)
+        in_a, in_b = P(ab, am, None), P(ab, None, an)
+        in_bias, in_res = P(an), P(ab, am, an)
+        out_spec = P(ab, am, an)
+    elif sched == "replicated":
+        in_a, in_b = P(am, None), P(None, an)
+        in_bias, in_res = P(an), P(am, an)
+        out_spec = P(am, an)
+    elif sched == "allgather_a":
+        in_a, in_b, in_bias, in_res = P(am, None), P(), P(), P()
+        out_spec = P()
+    elif sched == "reduce_scatter_k":
+        in_a, in_b, in_bias = P(None, ak), P(ak, None), P()
+        in_res = out_spec = P(ak, None)
+    else:  # ring_k
+        in_a, in_b, in_bias, in_res = P(None, ak), P(ak, None), P(), P()
+        out_spec = P()
+
+    def body(*args):
+        a_blk, b_blk, *rest = args
+        it = iter(rest)
+        bias_blk = next(it) if epi.bias else None
+        res_blk = next(it) if epi.residual else None
+        if sched == "replicated":
+            z = local_plan._fn(a_blk, b_blk, None, None)
+        elif sched == "allgather_a":
+            z = ring_allgather_matmul(a_blk, b_blk, am, matmul=local_mm)
+        elif sched == "reduce_scatter_k":
+            z = matmul_ring_reducescatter(a_blk, b_blk, ak, matmul=local_mm)
+        else:
+            z = ring_systolic_kpass(a_blk, b_blk, axis=ak, matmul=local_mm)
+        return apply_epilogue(z, bias_blk, act, res_blk).astype(out_dt)
+
+    in_specs = [in_a, in_b]
+    if epi.bias:
+        in_specs.append(in_bias)
+    if epi.residual:
+        in_specs.append(in_res)
+    # Ring outputs are replicated by construction, not by a verifiable
+    # per-op replication rule — declare specs, skip the rep check.
+    mapped = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=tuple(in_specs),
+        out_specs=out_spec,
+        check_vma=False,
+    )
+    eff_m = spec.eff_m
+
+    def run(a, b, bias, residual):
+        if spec.batched_b:
+            nb = math.prod(spec.batch)
+            af = a.reshape(nb, spec.m, spec.k)
+            bf = b.reshape(nb, spec.k, spec.n)
+            resf = None if residual is None else residual.reshape(nb, spec.m, spec.n)
+            args = [af, bf]
+        else:
+            # Leading batch dims of `a` fold into M, exactly as in the
+            # unsharded pallas path — the M partition shards eff_m.
+            af = a.reshape(eff_m, spec.k)
+            resf = None if residual is None else residual.reshape(eff_m, spec.n)
+            args = [af, b]
+        if epi.bias:
+            args.append(bias)
+        if epi.residual:
+            args.append(resf)
+        out = mapped(*args)
+        return out.reshape(*spec.batch, spec.m, spec.n) if spec.batch else out
+
+    return jax.jit(run)
+
+
+def _build_sharded_plan(spec: GemmSpec, be: _Backend, mesh: Mesh) -> ShardedPlan:
+    """ONE planner: resolve the collective schedule, build the per-shard Plan
+    through the ordinary `plan()` path (cached, autotuned at the LOCAL shape),
+    and wrap it in the shard_map executor."""
+    shard = spec.shard
+    live = tuple((str(n), int(s)) for n, s in mesh.shape.items())
+    if live != shard.mesh_axes:
+        raise ValueError(
+            f"ShardSpec was built for mesh axes {shard.mesh_axes} but"
+            f" plan() got a mesh with {live}; rebuild it with"
+            f" ShardSpec.from_mesh(mesh, ...)"
+        )
+    sched, local_spec, bytes_moved, phases = _resolve_sharding(spec)
+    local_plan = plan(local_spec, backend=be.name)
+    # allgather_a / reduce_scatter_k run the local kernel once per ring step
+    # (p = phases + 1); replicated and ring_k invoke it exactly once.
+    invocations = phases + 1 if sched in ("allgather_a", "reduce_scatter_k") else 1
+    p = ShardedPlan(
+        spec=spec,
+        backend=be.name,
+        capabilities=be.caps,
+        blocks=local_plan.blocks,
+        out_dtype=spec.resolved_out_dtype(),
+        interpret=not _on_tpu(),
+        flops=spec.flops(),
+        vmem_bytes=local_plan.vmem_bytes,
+        sigma_table=None,
+        stagger_table=local_plan.stagger_table,
+        mesh=mesh,
+        schedule=sched,
+        local=local_plan,
+        bytes_moved=bytes_moved,
+        collective_phases=phases,
+        kernel_invocations=invocations,
+    )
+    p._fn = _sharded_executor(spec, sched, mesh, local_plan)
+    return p
+
+
 def clear_plan_cache() -> None:
     """Test hook: drop all cached plans and reset the hit/miss counters."""
     _PLAN_CACHE.clear()
@@ -879,7 +1412,8 @@ def clear_plan_cache() -> None:
 
 
 def plan_cache_info() -> Dict[str, Any]:
-    """Cache telemetry: one entry per (spec, backend) pair ever planned."""
+    """Cache telemetry: one entry per (spec, backend, platform, mesh) ever
+    planned — the same spec under two different meshes is two entries."""
     return {
         "size": len(_PLAN_CACHE),
         "hits": _PLAN_STATS["hits"],

@@ -31,7 +31,15 @@ import json
 import os
 from typing import Any, Dict, List, Optional
 
-__all__ = ["PEAK_FLOPS", "HBM_BW", "LINK_BW", "analyze_artifact", "analyze_dir", "render_markdown"]
+__all__ = [
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "LINK_BW",
+    "analyze_artifact",
+    "analyze_dir",
+    "analyze_plan",
+    "render_markdown",
+]
 
 PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
 HBM_BW = 819e9       # bytes/s per chip
@@ -94,6 +102,63 @@ def analyze_artifact(art: Dict[str, Any]) -> Optional[Dict[str, Any]]:
         "model_flops": mf,
         "useful_ratio": (mf / hlo_total) if hlo_total else 0.0,
         "roofline_fraction": (t_model / terms[dominant]) if terms[dominant] else 0.0,
+        "hint": _HINTS[dominant],
+    }
+
+
+def analyze_plan(desc: Dict[str, Any]) -> Dict[str, Any]:
+    """Roofline terms for ONE GEMM plan from its `Plan.describe()` record —
+    per device, per call, at the TPU v5e constants.
+
+    For a ShardedPlan the sharding provenance supplies per-shard FLOPs and
+    the collective's bytes-moved, so the communication cost of a schedule is
+    reportable before any profile exists (serve `--plan-stats`, the sharded
+    bench).  Unsharded plans get a zero collective term through the same
+    arithmetic.
+    """
+    import math as _math
+
+    import numpy as _np
+
+    sh = desc.get("sharding") or {}
+    flops = sh.get("per_shard_flops", desc["flops"])
+    if "per_shard_mkn" in sh:
+        m, k, n = sh["per_shard_mkn"]
+        # batched_b local specs keep their batch dims out of eff_m
+        nb = _math.prod(sh.get("per_shard_batch") or [1])
+    else:
+        m, k, n = (int(x) for x in desc["mkn"].split("x"))
+        # "mkn" folds batch into M only for 2D b; batched_b products stream
+        # per-element A/B/C, so scale bytes to match the batch-inclusive FLOPs
+        nb = _math.prod(desc.get("batch") or [1]) if desc.get("batched_b") else 1
+    dt_a, dt_b = desc.get("dtypes", ["float32", "float32"])
+    # Ring schedules re-invoke the per-shard kernel once per step: the device
+    # streams `inv` A chunks and writes `inv` output tiles per call.
+    inv = sh.get("kernel_invocations", 1)
+    hbm_bytes = nb * (
+        inv * m * k * _np.dtype(dt_a).itemsize
+        + k * n * _np.dtype(dt_b).itemsize
+        + inv * m * n * _np.dtype(desc["out_dtype"]).itemsize
+    )
+    coll_bytes = sh.get("bytes_moved", 0)
+    terms = {
+        "compute": flops / PEAK_FLOPS,
+        "memory": hbm_bytes / HBM_BW,
+        "collective": coll_bytes / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    return {
+        "backend": desc["backend"],
+        "mkn": desc["mkn"],
+        "schedule": sh.get("schedule"),
+        "per_shard_flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": coll_bytes,
+        "t_compute_s": terms["compute"],
+        "t_memory_s": terms["memory"],
+        "t_collective_s": terms["collective"],
+        "dominant": dominant,
+        "t_bound_s": terms[dominant],
         "hint": _HINTS[dominant],
     }
 

@@ -10,10 +10,12 @@ runtime).
 
 Every projection GEMM routes through the plan/execute API
 (`repro.kernels.api`): the first prefill/decode trace *plans* each logical
-GEMM shape once (backend choice, autotuned blocks, σ tables), and the
-process-wide plan cache serves every subsequent request — `--plan-stats`
-prints the cache (one entry per (spec, backend) pair, however many requests
-ran).
+GEMM shape once (backend choice, autotuned blocks, σ tables, and — for
+specs carrying a ShardSpec — the collective schedule), and the process-wide
+plan cache serves every subsequent request — `--plan-stats` prints the
+cache (one entry per (spec, backend, mesh) triple, however many requests
+ran), including per-plan communication cost for sharded plans.  `--mesh
+DxM` serves under a local device mesh (sharding constraints active).
 """
 
 from __future__ import annotations
@@ -36,10 +38,14 @@ __all__ = ["generate", "main", "report_plan_cache"]
 def report_plan_cache(prefix: str = "[serve]") -> dict:
     """Print + return the GEMM plan-cache telemetry for this process.
 
-    Serving wants planning out of the request path: each (spec, backend)
-    pair is planned at most once per process, and this report is the
+    Serving wants planning out of the request path: each (spec, backend,
+    mesh) triple is planned at most once per process, and this report is the
     observable proof (hits = executions that reused an existing plan).
+    Sharded plans additionally report their collective schedule and the
+    roofline communication cost derived from bytes-moved provenance.
     """
+    from repro.launch.roofline import analyze_plan
+
     info = kernel_api.plan_cache_info()
     print(
         f"{prefix} GEMM plan cache: {info['size']} plans, "
@@ -53,10 +59,20 @@ def report_plan_cache(prefix: str = "[serve]") -> dict:
             + (f"+{epi['activation']}" if epi["activation"] else "")
             + ("+r" if epi["residual"] else "")
         ) or "-"
+        sh = p.get("sharding")
+        if sh:
+            mesh_s = "x".join(str(s) for _, s in sh["mesh"])
+            rl = analyze_plan(p)
+            shard_s = (
+                f"{sh['schedule']}@{mesh_s} moved={sh['bytes_moved']}B "
+                f"t_coll={rl['t_collective_s'] * 1e6:.2f}us"
+            )
+        else:
+            shard_s = "-"
         print(
             f"{prefix}   {p['backend']:11s} {p['structure']:9s} "
             f"{p['mkn']:>18s} batch={p['batch'] or '-'} blocks={blocks} "
-            f"epi={epi_s:12s} flops={p['flops']:.2e}"
+            f"epi={epi_s:12s} flops={p['flops']:.2e} shard={shard_s}"
         )
     return info
 
@@ -120,7 +136,23 @@ def main(argv=None) -> None:
         action="store_true",
         help="print the GEMM plan cache after serving (one plan per spec)",
     )
+    ap.add_argument(
+        "--mesh",
+        default=None,
+        metavar="DxM",
+        help="serve under a local ('data', 'model') device mesh, e.g. 1x1 or"
+        " 2x4 (needs that many devices; sharding constraints activate)",
+    )
     args = ap.parse_args(argv)
+
+    ctx = ShardCtx()
+    if args.mesh:
+        from repro.launch.mesh import make_local_mesh
+
+        shape = tuple(int(x) for x in args.mesh.lower().split("x"))
+        mesh = make_local_mesh(shape, ("data", "model"))
+        ctx = ShardCtx(mesh=mesh)
+        print(f"[serve] mesh: {dict(mesh.shape)}")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -133,7 +165,7 @@ def main(argv=None) -> None:
         jax.random.PRNGKey(args.seed + 1), (args.batch, args.prompt_len), 0, cfg.vocab_size
     ).astype(jnp.int32)
 
-    out, rate = generate(model, params, prompts, gen_len=args.gen)
+    out, rate = generate(model, params, prompts, gen_len=args.gen, ctx=ctx)
     print(f"[serve] {args.arch} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
     print(f"[serve] decode steps/s: {rate:.2f}  ({rate * args.batch:.1f} tok/s batched)")
     print(f"[serve] sample row 0: {np.asarray(out[0])[:16]}")

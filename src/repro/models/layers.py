@@ -130,6 +130,8 @@ def gemm(
     bias: Optional[jax.Array] = None,
     activation: Optional[str] = None,
     residual: Optional[jax.Array] = None,
+    mesh: Any = None,
+    shard: Any = None,
 ) -> jax.Array:
     """Config-routed GEMM via plan/execute: XLA dot under pjit, Pallas mesh
     kernel if selected.
@@ -139,8 +141,13 @@ def gemm(
     A/B lever), applied as plain jnp ops otherwise — one call site, identical
     semantics either way.  Block shapes come from cfg.mesh_block_m/n/k when
     set (> 0); otherwise `kernels/autotune.py` resolves them at plan time.
-    Plans are cached process-wide per (spec, backend) pair, so every
+    Plans are cached process-wide per (spec, backend, mesh) triple, so every
     retrace/request with the same logical shape reuses the same executable.
+
+    With `shard` (a `kernels.api.ShardSpec`) and its live device `mesh`, the
+    plan is a ShardedPlan: the same per-shard kernel lowered through
+    shard_map with the ShardSpec's collective schedule — operands/results
+    stay global arrays, so call sites do not change shape-wise.
     """
     backend = "pallas_mesh" if getattr(cfg, "use_mesh_kernel", False) else "xla"
     blocks = (
@@ -150,9 +157,9 @@ def gemm(
     )
     if backend != "xla" and not getattr(cfg, "fused_dense_epilogue", True):
         spec = _api.GemmSpec.from_operands(
-            x, w, out_dtype=jnp.float32, blocks=blocks
+            x, w, out_dtype=jnp.float32, blocks=blocks, shard=shard
         )
-        z = _api.plan(spec, backend=backend)(x, w)
+        z = _api.plan(spec, backend=backend, mesh=mesh)(x, w)
         return _api.apply_epilogue(z, bias, activation, residual).astype(x.dtype)
     spec = _api.GemmSpec.from_operands(
         x,
@@ -164,8 +171,9 @@ def gemm(
         ),
         out_dtype=x.dtype,
         blocks=blocks,
+        shard=shard,
     )
-    return _api.plan(spec, backend=backend)(x, w, bias=bias, residual=residual)
+    return _api.plan(spec, backend=backend, mesh=mesh)(x, w, bias=bias, residual=residual)
 
 
 def dense(
@@ -176,9 +184,14 @@ def dense(
     *,
     activation: Optional[str] = None,
     residual: Optional[jax.Array] = None,
+    mesh: Any = None,
+    shard: Any = None,
 ) -> jax.Array:
     """Dense projection with the fused epilogue: one kernel on the mesh path."""
-    return gemm(x, w, cfg, bias=b, activation=activation, residual=residual)
+    return gemm(
+        x, w, cfg, bias=b, activation=activation, residual=residual,
+        mesh=mesh, shard=shard,
+    )
 
 
 def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:

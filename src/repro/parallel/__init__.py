@@ -17,13 +17,20 @@ from repro.parallel.sharding import (
     constrain,
     logical_to_physical,
     named_sharding,
+    shard_map,
     tree_shardings,
 )
-from repro.parallel.systolic import phase_counts, systolic_matmul
+from repro.parallel.systolic import (
+    phase_counts,
+    ring_systolic_kpass,
+    systolic_matmul,
+)
 
 __all__ = [
     "systolic_matmul",
+    "ring_systolic_kpass",
     "phase_counts",
+    "shard_map",
     "pipeline_apply",
     "bubble_fraction",
     "ring_allgather_matmul",

@@ -8,15 +8,28 @@ chunk it already holds while ppermuting the next chunk — the same
 double-buffered dataflow as `parallel/systolic.py`, applied to 1D rings.
 
 Used by the hillclimb experiments (EXPERIMENTS.md §Perf) as the beyond-paper
-collective schedule.
+collective schedule, and by the ShardedPlan collective schedules in
+`kernels/api.py` (`allgather_a`, `reduce_scatter_k`) — the `matmul=` hook is
+what lets the planner fuse its per-shard kernel call (Pallas mesh kernel or
+XLA dot) inside the ring instead of a hard-wired jnp.dot.
 """
 
 from __future__ import annotations
+
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 __all__ = ["ring_allgather_matmul", "matmul_ring_reducescatter", "psum_if_multi"]
+
+# Per-step local product hook: (chunk, weights) -> f32 partial.  None selects
+# the plain XLA dot; ShardedPlan passes its per-shard Plan executor here.
+MatmulFn = Optional[Callable[[jax.Array, jax.Array], jax.Array]]
+
+
+def _default_mm(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
 
 
 def _shift(p: int, by: int = 1):
@@ -35,13 +48,17 @@ def _axis_size(axis) -> int:
     return size
 
 
-def ring_allgather_matmul(x_blk: jax.Array, w: jax.Array, axis: str) -> jax.Array:
+def ring_allgather_matmul(
+    x_blk: jax.Array, w: jax.Array, axis: str, *, matmul: MatmulFn = None
+) -> jax.Array:
     """Computes all_gather(x, axis) @ w without materializing the gather.
 
     x_blk: local (m_blk, k) shard of a row-sharded X (full X is (p*m_blk, k));
     w: replicated (k, n).  Returns the local (p*m_blk, n) result — i.e. the
     full product, built ring-step by ring-step while chunks circulate.
+    `matmul` computes each (m_blk, k) @ (k, n) step (default: XLA f32 dot).
     """
+    mm = matmul or _default_mm
     p = _axis_size(axis)
     idx = jax.lax.axis_index(axis)
     m_blk, n = x_blk.shape[0], w.shape[1]
@@ -50,21 +67,25 @@ def ring_allgather_matmul(x_blk: jax.Array, w: jax.Array, axis: str) -> jax.Arra
     for t in range(p):
         # chunk `cur` originated at rank (idx + t) mod p
         src = (idx + t) % p
-        part = jnp.dot(cur, w, preferred_element_type=jnp.float32)
+        part = mm(cur, w)
         out = jax.lax.dynamic_update_slice(out, part, (src * m_blk, 0))
         if t < p - 1:
             cur = jax.lax.ppermute(cur, axis, _shift(p, 1))
     return out
 
 
-def matmul_ring_reducescatter(x: jax.Array, w_blk: jax.Array, axis: str) -> jax.Array:
+def matmul_ring_reducescatter(
+    x: jax.Array, w_blk: jax.Array, axis: str, *, matmul: MatmulFn = None
+) -> jax.Array:
     """Computes reduce_scatter(x @ w_col_shards) with ring accumulation.
 
     x: local (m, k_blk) shard of a column-sharded X; w_blk: local (k_blk, n).
     Full product rows are reduced around the ring so each rank ends with its
     (m/p, n) slice of sum_k X_k @ W_k; the accumulator hop overlaps the next
-    partial matmul.
+    partial matmul.  `matmul` computes each (m/p, k_blk) @ (k_blk, n) step
+    (default: XLA f32 dot).
     """
+    mm = matmul or _default_mm
     p = _axis_size(axis)
     idx = jax.lax.axis_index(axis)
     m, n = x.shape[0], w_blk.shape[1]
@@ -79,7 +100,7 @@ def matmul_ring_reducescatter(x: jax.Array, w_blk: jax.Array, axis: str) -> jax.
     for t in range(p):
         dst = (idx + t + 1) % p
         rows = jax.lax.dynamic_slice(x, (dst * mb, 0), (mb, x.shape[1]))
-        acc = acc + jnp.dot(rows, w_blk, preferred_element_type=jnp.float32)
+        acc = acc + mm(rows, w_blk)
         if t < p - 1:
             acc = jax.lax.ppermute(acc, axis, _shift(p, 1))
     return acc

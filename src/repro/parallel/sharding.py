@@ -26,6 +26,7 @@ Default logical->physical rules:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -188,16 +189,42 @@ def _axes_size(mesh: Mesh, a) -> int:
     return n
 
 
+# (spec, shape, mesh-shape) triples already warned about — the fallback is
+# per-layer-per-step hot-path code, so each distinct drop warns exactly once.
+_WARNED_DROPS: set = set()
+
+
 def _drop_indivisible(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
     """Replicate any dim whose size doesn't divide by its mapped axes product.
 
     pjit *arguments* require exact divisibility (XLA pads only internal ops);
     odd published dims (vocab=49155, heads=40 vs TP=16) fall back to
     replicated on that dim — recorded in EXPERIMENTS.md §Dry-run notes.
+    The drop is no longer silent: each distinct (spec, shape, mesh) warns
+    once, so a mis-sized dim that quietly replicates a 16-way-sharded tensor
+    shows up in logs instead of only in the memory profile.
     """
-    out = []
+    out, dropped = [], []
     for dim, a in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
-        out.append(a if (a is None or dim % _axes_size(mesh, a) == 0) else None)
+        if a is None or dim % _axes_size(mesh, a) == 0:
+            out.append(a)
+        else:
+            out.append(None)
+            dropped.append((dim, a))
+    if dropped:
+        key = (tuple(spec), tuple(shape), tuple(mesh.shape.items()))
+        if key not in _WARNED_DROPS:
+            _WARNED_DROPS.add(key)
+            detail = ", ".join(
+                f"dim {dim} % {_axes_size(mesh, a)} != 0 (axes {a!r})"
+                for dim, a in dropped
+            )
+            warnings.warn(
+                f"sharding {spec} of shape {tuple(shape)} fell back to"
+                f" replicated on indivisible dim(s): {detail}",
+                UserWarning,
+                stacklevel=3,
+            )
     return P(*out)
 
 

@@ -27,12 +27,20 @@ Hardware adaptation of the paper's step-count claim (DESIGN.md §2):
 
 `phase_counts()` reports the collective-phase arithmetic for the benchmark
 table; `systolic_matmul` is the user-facing jit entry point.
+
+`ring_systolic_kpass` is the 1D-ring form of the same principle and the
+backend of the ShardedPlan `ring_k` collective schedule (`kernels/api.py`):
+with A column- and B row-sharded over K, p accumulator wavefronts circulate
+the ring via `jax.lax.ppermute`, each picking up the resident partial product
+as it passes — partial products flow through neighbours instead of returning
+to a central psum point, the paper's 2n-1 staggered feed at device
+granularity.  This module is consulted by the planner, not just by demos.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +48,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.parallel.sharding import shard_map
 
-__all__ = ["systolic_matmul", "systolic_matmul_shardmap", "phase_counts"]
+__all__ = [
+    "systolic_matmul",
+    "systolic_matmul_shardmap",
+    "ring_systolic_kpass",
+    "phase_counts",
+]
 
 
 def _shift_perm(p: int, shift: int) -> list[Tuple[int, int]]:
@@ -74,14 +87,60 @@ def phase_counts(p: int) -> dict:
         then p compute steps with p-1 rotation phases hidden under them.
     switched (this module, the 'mesh array' analogue):
         1 alignment permute phase + p compute steps.
+    1D K-pass (the ShardedPlan 'ring_k' / 'reduce_scatter_k' schedules):
+        gather-then-compute psums partials through a ring all-reduce,
+        2(p-1) phases — partials return to a central point, the 3n-2 regime;
+        the ring-systolic pass flows them through neighbours in p-1 phases,
+        the 2n-1 regime.
     """
     return {
         "p": p,
         "naive_phases": (p - 1) + p,  # 2p-1  ~ the 3n-2 regime
         "switched_phases": 1 + p,  # p+1  ~ the 2n-1 regime
+        "kpass_psum_phases": 2 * (p - 1),  # ring all-reduce of partials
+        "kpass_ring_phases": p - 1,  # ring_systolic_kpass wavefronts
         "paper_standard_steps": 3 * p - 2,
         "paper_mesh_steps": 2 * p - 1,
     }
+
+
+def ring_systolic_kpass(
+    a_blk: jax.Array,
+    b_blk: jax.Array,
+    *,
+    axis: str,
+    matmul: Optional[Callable[[jax.Array, jax.Array], jax.Array]] = None,
+) -> jax.Array:
+    """K-contraction over a device ring with systolic partial-product flow.
+
+    a_blk: local (m, k/p) column shard of A; b_blk: local (k/p, n) row shard
+    of B (shard t holds the K-slice resident on rank t).  Each rank computes
+    its partial product ONCE; p accumulator wavefronts then circulate the
+    ring (`ppermute`), each adding the resident partial as it passes.  After
+    p-1 hops every wavefront has visited all p ranks, so each rank holds the
+    full C = sum_t A_t @ B_t — replicated output with no psum tree.
+
+    This is the paper's staggered feed mapped onto collectives: wavefront w
+    starts at rank w (the stagger), and partials flow through neighbours
+    instead of returning to a central point (2n-1 vs 3n-2; DESIGN.md §9).
+    Each rank's sum accumulates in ring order starting from its own partial,
+    so cross-rank float32 results can differ in the last ulp (exact for
+    integer-valued data); `out_specs` replication is therefore declared, not
+    verified (check_vma=False).  `matmul` computes the one local
+    (m, k/p) @ (k/p, n) product (default: XLA f32 dot).
+    """
+    from repro.parallel.collectives import _axis_size, _default_mm, _shift
+
+    mm = matmul or _default_mm
+    p = _axis_size(axis)
+    part = mm(a_blk, b_blk)
+    acc = part
+    # Unrolled wavefront loop: each hop's ppermute depends only on the
+    # previous accumulator, and `part` is loop-invariant, so XLA overlaps the
+    # neighbour exchange with the adds (same dataflow as the 2D loop above).
+    for _ in range(p - 1):
+        acc = jax.lax.ppermute(acc, axis, _shift(p, 1)) + part
+    return acc
 
 
 def systolic_matmul_shardmap(

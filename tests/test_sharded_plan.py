@@ -1,0 +1,465 @@
+"""Sharded plan/execute surface (DESIGN.md §9): ShardSpec construction and
+validation, the one-planner degenerate path, collective-schedule numerics
+bit-for-bit vs the unsharded Plan, divisibility rejection, plan-cache keying
+on mesh identity, and the satellite guards (mesh validation, indivisible-drop
+warning, parallel exports).
+
+Multi-device checks run in-process when the runtime already has >= 8 devices
+(the CI distributed job sets XLA_FLAGS) and otherwise re-exec themselves in
+an 8-virtual-CPU-device subprocess, keeping the tier-1 process at 1 device
+per the harness contract.
+"""
+
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import api
+from repro.kernels.api import Epilogue, GemmSpec, ShardedPlan, ShardSpec
+from repro.launch.mesh import make_local_mesh
+
+B = 8
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _clean_plan_cache():
+    api.clear_plan_cache()
+    yield
+    api.clear_plan_cache()
+
+
+def _int_mat(shape, seed):
+    """Integer-valued f32 operands: every partial product and sum is exact,
+    so all collective summation orders agree bit for bit."""
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(-4, 5, size=shape).astype(np.float32))
+
+
+def _run_in_8dev_subprocess(fn_name: str) -> None:
+    """Re-exec a module-level `_check_*` function under 8 CPU devices."""
+    from repro.launch.mesh import forced_device_env
+
+    env = forced_device_env(8, pythonpath=("src", "tests"))
+    out = subprocess.run(
+        [
+            sys.executable,
+            "-c",
+            f"import test_sharded_plan as m; m.{fn_name}(); print('SUBPROC_OK')",
+        ],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=_REPO,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-4000:]}"
+    assert "SUBPROC_OK" in out.stdout
+
+
+def _multi_or_subprocess(fn, fn_name: str) -> None:
+    if jax.device_count() >= 8:
+        fn()
+    else:
+        _run_in_8dev_subprocess(fn_name)
+
+
+# --- ShardSpec construction / validation (1 device) ---------------------------
+
+
+def test_shardspec_validates_axes_and_schedule():
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="not a mesh axis"):
+        ShardSpec.from_mesh(mesh, m="rows")
+    with pytest.raises(ValueError, match="schedule must be 'auto' or one of"):
+        ShardSpec.from_mesh(mesh, k="model", schedule="cannon")
+    with pytest.raises(ValueError, match="partitions more than one GEMM dim"):
+        ShardSpec.from_mesh(mesh, m="model", n="model")
+    with pytest.raises(ValueError, match="axis_k must be a single mesh axis"):
+        ShardSpec.from_mesh(mesh, k=("data", "model"))
+    # tuple axes are allowed on the local dims and length-1 tuples unwrap
+    # (axis_k included — only MULTI-axis K is rejected)
+    s = ShardSpec.from_mesh(mesh, m=("data", "model"), n=None)
+    assert s.axis_m == ("data", "model") and s.axis_size(s.axis_m) == 1
+    assert ShardSpec.from_mesh(mesh, m=("data",)).axis_m == "data"
+    assert ShardSpec.from_mesh(mesh, k=("model",)).axis_k == "model"
+    assert ShardSpec.unsharded(mesh).is_trivial
+
+
+def test_shardspec_is_hashable_spec_field():
+    mesh = make_local_mesh((1,), ("model",))
+    s1 = GemmSpec(m=B, k=B, n=B, shard=ShardSpec.from_mesh(mesh, m="model"))
+    s2 = GemmSpec(m=B, k=B, n=B, shard=ShardSpec.from_mesh(mesh, m="model"))
+    assert s1 == s2 and hash(s1) == hash(s2)
+    assert s1 != GemmSpec(m=B, k=B, n=B)
+    with pytest.raises(TypeError, match="shard must be a ShardSpec"):
+        GemmSpec(m=B, k=B, n=B, shard="model")
+
+
+def test_shardspec_from_rules_maps_logical_axes():
+    from repro.parallel.sharding import DEFAULT_RULES
+
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    s = ShardSpec.from_rules(mesh, DEFAULT_RULES, m="batch", n="mlp")
+    # 'batch' -> ('pod','data') with 'pod' absent on this mesh; 'mlp' -> model
+    assert s.axis_m == "data" and s.axis_n == "model" and s.axis_k is None
+    # 'seq' maps to None -> dim stays whole
+    assert ShardSpec.from_rules(mesh, DEFAULT_RULES, k="seq").axis_k is None
+
+
+def test_plan_requires_matching_mesh_and_shardspec():
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    spec = GemmSpec(m=B, k=B, n=B, shard=ShardSpec.unsharded(mesh))
+    with pytest.raises(ValueError, match="pass the device mesh"):
+        api.plan(spec)
+    with pytest.raises(ValueError, match="spec has no ShardSpec"):
+        api.plan(GemmSpec(m=B, k=B, n=B), mesh=mesh)
+    other = make_local_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="built for mesh axes"):
+        api.plan(spec, mesh=other)
+
+
+def test_sharding_capability_gates_backends():
+    mesh = make_local_mesh((1,), ("model",))
+    spec = GemmSpec(m=B, k=B, n=B, shard=ShardSpec.unsharded(mesh))
+    api.register_backend(
+        "no_shard_double",
+        lambda plan, a, b, bias, residual: a @ b,
+        {"structures": {"general"}, "sharding": False},
+    )
+    try:
+        with pytest.raises(api.CapabilityError, match="sharding"):
+            api.plan(spec, backend="no_shard_double", mesh=mesh)
+    finally:
+        api.unregister_backend("no_shard_double")
+    caps = api.get_capabilities("xla")
+    assert caps.sharding and api.get_capabilities("pallas_mesh").sharding
+
+
+# --- one planner: the degenerate ShardSpec path (1 device) --------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_mesh", "ref"])
+def test_unsharded_shardspec_matches_plain_plan_bitwise(backend):
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    a, b = _int_mat((2 * B, B), 0), _int_mat((B, 3 * B), 1)
+    bias = _int_mat((3 * B,), 2)
+    epi = Epilogue(bias=True, activation="gelu")
+    want = api.plan(
+        GemmSpec.from_operands(a, b, epilogue=epi, blocks=(B, B, B)),
+        backend=backend,
+    )(a, b, bias=bias)
+    spec = GemmSpec.from_operands(
+        a, b, epilogue=epi, blocks=(B, B, B), shard=ShardSpec.unsharded(mesh)
+    )
+    p = api.plan(spec, backend=backend, mesh=mesh)
+    assert isinstance(p, ShardedPlan) and p.schedule == "replicated"
+    np.testing.assert_array_equal(np.asarray(p(a, b, bias=bias)), np.asarray(want))
+    # cached: the identical object comes back, and the per-shard local plan
+    # is itself a cached ordinary Plan (one planner, not two)
+    assert api.plan(spec, backend=backend, mesh=mesh) is p
+    assert p.local is api.plan(p.local.spec, backend=backend)
+
+
+def test_sharded_plan_describe_provenance_and_roofline():
+    import json
+
+    from repro.launch.roofline import analyze_plan
+
+    mesh = make_local_mesh((1,), ("model",))
+    spec = GemmSpec(m=2 * B, k=B, n=B, shard=ShardSpec.unsharded(mesh))
+    d = api.plan(spec, mesh=mesh).describe()
+    json.dumps(d)
+    sh = d["sharding"]
+    assert sh["mesh"] == [["model", 1]] and sh["schedule"] == "replicated"
+    assert sh["per_shard_mkn"] == [2 * B, B, B]
+    assert sh["per_shard_flops"] == 2 * 2 * B * B * B and sh["bytes_moved"] == 0
+    assert d["fused_epilogue"] is False
+    rl = analyze_plan(d)
+    assert rl["t_collective_s"] == 0.0 and rl["dominant"] in ("compute", "memory")
+    # unsharded describe() flows through the same arithmetic
+    rl2 = analyze_plan(api.plan(GemmSpec(m=B, k=B, n=B)).describe())
+    assert rl2["schedule"] is None and rl2["collective_bytes"] == 0
+    # batched_b byte counts scale with batch, matching the batch-full FLOPs
+    rl3 = analyze_plan(
+        api.plan(GemmSpec(m=B, k=B, n=B, batch=(4,), batched_b=True)).describe()
+    )
+    assert rl3["hbm_bytes"] == 4 * rl2["hbm_bytes"]
+    assert rl3["per_shard_flops"] == 4 * rl2["per_shard_flops"]
+
+
+def test_scrambled_structure_rejected_with_shard():
+    mesh = make_local_mesh((1,), ("model",))
+    spec = GemmSpec(
+        m=B, k=B, n=B, structure="scrambled", blocks=(B, B, B),
+        shard=ShardSpec.unsharded(mesh),
+    )
+    with pytest.raises(ValueError, match="scrambled.*does not compose"):
+        api.plan(spec, mesh=mesh)
+
+
+def test_schedule_resolution_and_bytes_moved_model():
+    """_resolve_sharding is pure arithmetic over the spec — the comm model
+    (bytes per device per call) and auto schedule choice are unit-testable
+    without devices."""
+    axes = (("x", 4),)
+    spec_k = GemmSpec(m=16, k=32, n=8, shard=ShardSpec(axes, axis_k="x"))
+    sched, local, bytes_moved, phases = api._resolve_sharding(spec_k)
+    assert sched == "reduce_scatter_k"  # auto: M % 4 == 0
+    assert (local.m, local.k, local.n) == (4, 8, 8)
+    assert local.epilogue.is_identity and local.shard is None
+    assert bytes_moved == 3 * 4 * 8 * 4 and phases == 3
+
+    spec_ring = GemmSpec(m=6, k=32, n=8, shard=ShardSpec(axes, axis_k="x"))
+    sched, local, bytes_moved, _ = api._resolve_sharding(spec_ring)
+    assert sched == "ring_k"  # auto: M=6 not divisible by 4
+    assert (local.m, local.k) == (6, 8) and bytes_moved == 3 * 6 * 8 * 4
+
+    spec_ag = GemmSpec(
+        m=16, k=32, n=8,
+        shard=ShardSpec(axes, axis_m="x", schedule="allgather_a"),
+        dtype_a="bfloat16",
+    )
+    sched, local, bytes_moved, _ = api._resolve_sharding(spec_ag)
+    assert sched == "allgather_a" and local.m == 4
+    assert bytes_moved == 3 * 4 * 32 * 2  # bf16 A chunks hop the ring
+
+    with pytest.raises(ValueError, match="cannot shard K"):
+        api._resolve_sharding(
+            GemmSpec(m=16, k=32, n=8,
+                     shard=ShardSpec(axes, axis_k="x", schedule="replicated"))
+        )
+    with pytest.raises(ValueError, match="requires axis_k"):
+        api._resolve_sharding(
+            GemmSpec(m=16, k=32, n=8,
+                     shard=ShardSpec(axes, axis_m="x", schedule="ring_k"))
+        )
+    with pytest.raises(ValueError, match="shards only K"):
+        api._resolve_sharding(
+            GemmSpec(m=16, k=32, n=8,
+                     shard=ShardSpec((("x", 4), ("y", 2)), axis_k="x", axis_n="y",
+                                     schedule="ring_k"))
+        )
+    # auto must not blame a schedule the caller never chose
+    with pytest.raises(ValueError, match="no collective schedule combines"):
+        api._resolve_sharding(
+            GemmSpec(m=16, k=32, n=8,
+                     shard=ShardSpec((("x", 4), ("y", 2)), axis_m="y", axis_k="x"))
+        )
+    with pytest.raises(ValueError, match="no batch dims"):
+        api._resolve_sharding(
+            GemmSpec(m=16, k=32, n=8, shard=ShardSpec(axes, axis_batch="x"))
+        )
+
+
+def test_layers_gemm_routes_shard(monkeypatch):
+    from repro.models.layers import gemm
+
+    class Cfg:
+        use_mesh_kernel = False
+        fused_dense_epilogue = True
+
+    mesh = make_local_mesh((1, 1), ("data", "model"))
+    x, w = _int_mat((2 * B, B), 3), _int_mat((B, B), 4)
+    want = gemm(x, w, Cfg())
+    got = gemm(x, w, Cfg(), mesh=mesh, shard=ShardSpec.unsharded(mesh))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    [desc] = [
+        p for p in api.plan_cache_info()["plans"] if p.get("sharding")
+    ]
+    assert desc["sharding"]["schedule"] == "replicated"
+
+
+def test_serve_report_prints_sharding_column(capsys):
+    from repro.launch.serve import report_plan_cache
+
+    mesh = make_local_mesh((1,), ("model",))
+    spec = GemmSpec(m=B, k=B, n=B, shard=ShardSpec.unsharded(mesh))
+    api.plan(spec, mesh=mesh)
+    info = report_plan_cache(prefix="[t]")
+    out = capsys.readouterr().out
+    assert "shard=replicated@1" in out and info["size"] >= 1
+
+
+# --- satellites (1 device) ----------------------------------------------------
+
+
+def test_make_local_mesh_validates_device_count():
+    with pytest.raises(ValueError, match="exceeds the .* available"):
+        make_local_mesh((64, 64), ("data", "model"))
+    with pytest.raises(ValueError, match="equal rank"):
+        make_local_mesh((1, 1), ("data",))
+
+
+def test_drop_indivisible_warns_once_per_spec():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel import sharding as shmod
+
+    class FakeMesh:
+        shape = {"data": 4, "model": 16}
+
+    shmod._WARNED_DROPS.clear()
+    spec = P("model", None)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = shmod._drop_indivisible(spec, (49155, 128), FakeMesh())
+        shmod._drop_indivisible(spec, (49155, 128), FakeMesh())  # same spec
+    assert out == P(None, None)
+    drops = [w for w in rec if "fell back to replicated" in str(w.message)]
+    assert len(drops) == 1  # once per (spec, shape, mesh)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        shmod._drop_indivisible(spec, (40, 128), FakeMesh())  # different shape
+        assert shmod._drop_indivisible(spec, (49152, 128), FakeMesh()) == spec
+    drops = [w for w in rec if "fell back to replicated" in str(w.message)]
+    assert len(drops) == 1  # new spec warns; divisible spec never warns
+
+
+def test_parallel_package_exports_public_names():
+    import repro.parallel as par
+
+    for name in (
+        "ShardingRules",
+        "named_sharding",
+        "constrain",
+        "shard_map",
+        "ring_systolic_kpass",
+    ):
+        assert hasattr(par, name) and name in par.__all__, name
+
+
+def test_phase_counts_cover_kpass_schedules():
+    from repro.parallel.systolic import phase_counts
+
+    for p in (2, 4, 8):
+        pc = phase_counts(p)
+        # ring-systolic K-pass: partials flow through neighbours (2n-1 regime)
+        # vs psum'd partials returning to a central point (3n-2 regime)
+        assert pc["kpass_ring_phases"] == p - 1
+        assert pc["kpass_psum_phases"] == 2 * (p - 1)
+        assert pc["kpass_ring_phases"] < pc["kpass_psum_phases"]
+
+
+# --- multi-device checks (8 virtual CPU devices) ------------------------------
+
+
+def _check_numerics_all_schedules():
+    """Every collective schedule x {xla, pallas_mesh} reproduces the
+    unsharded Plan bit for bit, epilogue included."""
+    api.clear_plan_cache()
+    M, K, N = 24, 16, 12
+    a, b = _int_mat((M, K), 0), _int_mat((K, N), 1)
+    bias = _int_mat((N,), 2)
+    epi = Epilogue(bias=True, activation="gelu")
+    mesh1d = make_local_mesh((4,), ("x",))
+    mesh2d = make_local_mesh((4, 2), ("x", "y"))
+    for backend in ("xla", "pallas_mesh"):
+        want = api.plan(
+            GemmSpec.from_operands(a, b, epilogue=epi, blocks=(B, B, B)),
+            backend=backend,
+        )(a, b, bias=bias)
+        cases = [
+            (mesh2d, ShardSpec.from_mesh(mesh2d, m="x", n="y"), "replicated"),
+            (mesh1d, ShardSpec.from_mesh(mesh1d, m="x", schedule="allgather_a"),
+             "allgather_a"),
+            (mesh1d, ShardSpec.from_mesh(mesh1d, k="x", schedule="reduce_scatter_k"),
+             "reduce_scatter_k"),
+            (mesh1d, ShardSpec.from_mesh(mesh1d, k="x", schedule="ring_k"), "ring_k"),
+            (mesh1d, ShardSpec.from_mesh(mesh1d, k="x"), "reduce_scatter_k"),  # auto
+        ]
+        for mesh, shard, want_sched in cases:
+            spec = GemmSpec.from_operands(
+                a, b, epilogue=epi, blocks=(B, B, B), shard=shard
+            )
+            p = api.plan(spec, backend=backend, mesh=mesh)
+            assert p.schedule == want_sched, (backend, p.schedule, want_sched)
+            got = p(a, b, bias=bias)
+            assert np.array_equal(np.asarray(got), np.asarray(want)), (
+                backend,
+                want_sched,
+            )
+            assert p.collective_phases == (0 if want_sched == "replicated" else 3)
+            # per-DEVICE work provenance: ring schedules invoke the local
+            # kernel once per ring step (p=4 here)
+            sh = p.describe()["sharding"]
+            want_inv = 4 if want_sched in ("allgather_a", "reduce_scatter_k") else 1
+            assert sh["kernel_invocations"] == want_inv
+            if want_sched == "allgather_a":
+                # gathering A means every device computes the full product
+                assert sh["per_shard_flops"] == p.flops
+
+    # batch handling: 2D b folds batch into the M partition; 3D b replicates
+    a3 = _int_mat((2, 4, K), 3)
+    want = api.plan(GemmSpec.from_operands(a3, b))(a3, b)
+    p = api.plan(
+        GemmSpec.from_operands(a3, b, shard=ShardSpec.from_mesh(mesh1d, m="x")),
+        mesh=mesh1d,
+    )
+    assert np.array_equal(np.asarray(p(a3, b)), np.asarray(want))
+    b3 = _int_mat((4, K, N), 4)
+    ab3 = _int_mat((4, 6, K), 5)
+    want = api.plan(GemmSpec.from_operands(ab3, b3))(ab3, b3)
+    p = api.plan(
+        GemmSpec.from_operands(
+            ab3, b3, shard=ShardSpec.from_mesh(mesh2d, batch="x", n="y")
+        ),
+        mesh=mesh2d,
+    )
+    assert np.array_equal(np.asarray(p(ab3, b3)), np.asarray(want))
+
+
+def _check_divisibility_and_cache_keying():
+    api.clear_plan_cache()
+    mesh1d = make_local_mesh((4,), ("x",))
+
+    def expect(msg, **spec_kw):
+        try:
+            api.plan(GemmSpec(**spec_kw), mesh=mesh1d)
+        except ValueError as e:
+            assert msg in str(e), (msg, str(e))
+        else:
+            raise AssertionError(f"expected rejection: {msg}")
+
+    expect("M=10 is not divisible",
+           m=10, k=16, n=12, shard=ShardSpec.from_mesh(mesh1d, m="x"))
+    expect("K=18 is not divisible",
+           m=8, k=18, n=12, shard=ShardSpec.from_mesh(mesh1d, k="x",
+                                                      schedule="ring_k"))
+    expect("M=6 is not divisible",
+           m=6, k=16, n=12, shard=ShardSpec.from_mesh(mesh1d, k="x",
+                                                      schedule="reduce_scatter_k"))
+    expect("N=10 is not divisible",
+           m=8, k=16, n=10, shard=ShardSpec.from_mesh(mesh1d, n="x"))
+
+    # cache keys on mesh identity: equal meshes share, disjoint devices don't
+    import jax.sharding as shd
+
+    m1 = make_local_mesh((4,), ("x",))
+    m2 = make_local_mesh((4,), ("x",))
+    m3 = shd.Mesh(np.array(jax.devices()[4:8]), ("x",))
+    spec = GemmSpec(m=8, k=16, n=12, shard=ShardSpec.from_mesh(m1, k="x"))
+    p1 = api.plan(spec, mesh=m1)
+    assert api.plan(spec, mesh=m2) is p1
+    assert api.plan(spec, mesh=m3) is not p1
+    # and the two sharded plans share the cached per-shard local plan
+    assert api.plan(spec, mesh=m3).local is p1.local
+
+
+@pytest.mark.slow
+def test_sharded_numerics_bitwise_8dev():
+    _multi_or_subprocess(_check_numerics_all_schedules, "_check_numerics_all_schedules")
+
+
+@pytest.mark.slow
+def test_divisibility_and_cache_keying_8dev():
+    _multi_or_subprocess(
+        _check_divisibility_and_cache_keying, "_check_divisibility_and_cache_keying"
+    )
