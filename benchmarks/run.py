@@ -8,6 +8,7 @@ Sections:
   symmetric    symmetric-product early readout (<= n+1+n/2)
   kernels      mesh-matmul BlockSpec structure + allclose gate + GEMM context
   dispatch     plan/execute dispatch overhead (eager matmul vs pre-built Plan)
+  moe          grouped-GEMM expert dispatch vs one-hot einsum (ms + bytes)
   sharded      ShardedPlan collective schedules: bytes-moved + step time
   distributed  Cannon phases, pipeline bubbles, ring-overlap wall-time
   train        short real training run (loss trajectory) on the demo config
@@ -24,6 +25,7 @@ from benchmarks import (
     bench_dispatch,
     bench_distributed,
     bench_kernels,
+    bench_moe,
     bench_roofline,
     bench_scramble,
     bench_sharded,
@@ -58,6 +60,7 @@ SECTIONS = {
     "symmetric": bench_symmetric.run,
     "kernels": bench_kernels.run,
     "dispatch": bench_dispatch.run,
+    "moe": bench_moe.run,
     "sharded": bench_sharded.run,
     "distributed": bench_distributed.run,
     "train": bench_train,
@@ -98,10 +101,12 @@ def main() -> None:
     names = [args.only] if args.only else list(SECTIONS)
     if args.json and "kernels" not in names:
         names.append("kernels")
-    if args.json and "kernels" in names and "dispatch" in names:
-        # the kernels --json branch already runs the dispatch microbench for
-        # its payload — don't time the same ~1500 calls twice
-        names.remove("dispatch")
+    if args.json and "kernels" in names:
+        # the kernels --json branch already runs the dispatch/moe/sharded
+        # microbenches for its payload — don't time the same calls twice
+        for ride_along in ("dispatch", "moe", "sharded"):
+            if ride_along in names:
+                names.remove(ride_along)
     failed = []
     for name in names:
         print(f"\n{'=' * 72}\n== bench: {name}\n{'=' * 72}")
@@ -109,10 +114,12 @@ def main() -> None:
         try:
             if name == "kernels" and args.json:
                 payload = bench_kernels.run(as_dict=True)
-                # dispatch-overhead + sharded-schedule microbenches ride along
-                # in the same JSON so BENCH_kernels.json tracks the plan-cache
-                # win and per-schedule comm cost across PRs
+                # dispatch-overhead + moe-dispatch + sharded-schedule
+                # microbenches ride along in the same JSON so
+                # BENCH_kernels.json tracks the plan-cache win, the grouped
+                # vs one-hot dispatch cost, and per-schedule comm cost
                 payload["dispatch"] = bench_dispatch.run(as_dict=True)
+                payload["moe"] = bench_moe.run(as_dict=True)
                 payload["sharded"] = bench_sharded.run(as_dict=True)
                 _write_kernels_json(payload, time.perf_counter() - t0, args.json_path)
             else:

@@ -6,6 +6,8 @@ api.py              plan/execute operator API: typed GemmSpec/Epilogue,
 mesh_matmul.py      staggered-k blocked matmul: fused scramble output, fused
                     bias/activation/residual epilogue, batched (b, i, j, k)
                     grid variant
+grouped.py          ragged grouped matmul (MoE experts): scalar-prefetched
+                    group sizes steering a (g, i, j, k) grid
 scramble_kernel.py  S^k as a scalar-prefetch block-permutation kernel
 autotune.py         block-shape autotuner: VMEM-budget candidate pruning,
                     timed/model search, versioned persistent cache
@@ -17,7 +19,10 @@ from repro.kernels.api import (
     BackendCapabilities,
     Epilogue,
     GemmSpec,
+    GroupedPlan,
+    GroupSpec,
     Plan,
+    ShardedGroupedPlan,
     ShardedPlan,
     ShardSpec,
     default_backend,
@@ -35,8 +40,11 @@ __all__ = [
     "BackendCapabilities",
     "Epilogue",
     "GemmSpec",
+    "GroupSpec",
+    "GroupedPlan",
     "Plan",
     "ShardSpec",
+    "ShardedGroupedPlan",
     "ShardedPlan",
     "default_backend",
     "get_default_backend",

@@ -30,6 +30,15 @@ collective schedule (`replicated` | `allgather_a` | `reduce_scatter_k` |
 `parallel/systolic.py`.  An unsharded spec is just the size-1-axes case of
 the same planner path — there is one planner, not two.
 
+The planner also covers **grouped (ragged-batch) GEMMs** (DESIGN.md §10):
+attach a `GroupSpec` (num_groups, static rows-per-group bound; K/N shared)
+and `plan(spec)` returns a `GroupedPlan` taking `(tokens, group_offsets,
+weights_stacked)` — the MoE expert regime, where every layer multiplies many
+small ragged row batches against per-expert weight slabs.  Backends declare
+the `grouped` capability with a dedicated impl (the Pallas ragged mesh
+kernel in `kernels/grouped.py`; segment-masked einsum on xla/ref), and an
+`expert` collective schedule shards the group dim over a device mesh (EP).
+
 `repro.kernels.ops.matmul` remains as a thin compat shim over this module.
 """
 
@@ -48,6 +57,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import autotune as _autotune
 from repro.kernels import ref
+from repro.kernels.grouped import grouped_mesh_matmul_pallas
 from repro.kernels.mesh_matmul import (
     ACTIVATIONS,
     mesh_matmul_pallas,
@@ -62,8 +72,11 @@ __all__ = [
     "CapabilityError",
     "Epilogue",
     "GemmSpec",
+    "GroupSpec",
+    "GroupedPlan",
     "Plan",
     "ShardSpec",
+    "ShardedGroupedPlan",
     "ShardedPlan",
     "apply_epilogue",
     "backend_names",
@@ -93,7 +106,12 @@ STRUCTURES = ("general", "symmetric", "scrambled")
 #   ring_k            A/B sharded on K; the paper's 2n-1 staggered feed as p
 #                     accumulator wavefronts ppermuting around the ring
 #                     (systolic.ring_systolic_kpass); output replicated
-SCHEDULES = ("replicated", "allgather_a", "reduce_scatter_k", "ring_k")
+#   expert            grouped specs only: the group (expert) dim sharded over
+#                     axis_g — tokens/weights/sizes reshard at the shard_map
+#                     boundary (the EP all-to-all), each device runs the
+#                     grouped kernel over its local groups, output rows stay
+#                     group-sharded
+SCHEDULES = ("replicated", "allgather_a", "reduce_scatter_k", "ring_k", "expert")
 
 
 # ---------------------------------------------------------------------------
@@ -127,6 +145,37 @@ class Epilogue:
         return not (self.bias or self.residual) and self.activation is None
 
 
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """Ragged-batch structure of one grouped GEMM (DESIGN.md §10).
+
+    `num_groups` weight slabs share K/N; tokens arrive concatenated
+    group-major in a capacity layout with a STATIC `rows_per_group` bound —
+    group g owns rows [g*rows_per_group, g*rows_per_group + size_g), where
+    the runtime sizes ride in the `group_offsets` execution operand
+    (cumulative counts, (num_groups+1,)).  Rows at or beyond a group's size
+    are zero on output.  Hashable and frozen: part of the plan-cache key, so
+    blocks are autotuned once per logical group shape.
+    """
+
+    num_groups: int
+    rows_per_group: int
+
+    def __post_init__(self):
+        object.__setattr__(self, "num_groups", int(self.num_groups))
+        object.__setattr__(self, "rows_per_group", int(self.rows_per_group))
+        if self.num_groups <= 0 or self.rows_per_group <= 0:
+            raise ValueError(
+                f"GroupSpec dims must be positive, got num_groups="
+                f"{self.num_groups}, rows_per_group={self.rows_per_group}"
+            )
+
+    @property
+    def rows(self) -> int:
+        """Total (static) token rows of the capacity layout."""
+        return self.num_groups * self.rows_per_group
+
+
 # Physical mesh axes naming a partition: a single axis name, or (for the
 # no-collective dims of the replicated schedule) a tuple of axis names.
 Axes = Union[str, Tuple[str, ...]]
@@ -147,9 +196,11 @@ class ShardSpec:
 
     `axis_k` must be a single axis name — the K collectives are 1D rings.
     `axis_m`/`axis_n`/`axis_batch` may be axis tuples under the replicated
-    schedule, where they only slice the local tile.  A ShardSpec whose axes
-    are all None/size-1 (`ShardSpec.unsharded`) routes through the identical
-    ShardedPlan path and reproduces the unsharded Plan bit for bit.
+    schedule, where they only slice the local tile.  `axis_g` (single axis)
+    partitions the group dim of a GROUPED spec — the `expert` schedule, EP.
+    A ShardSpec whose axes are all None/size-1 (`ShardSpec.unsharded`)
+    routes through the identical ShardedPlan path and reproduces the
+    unsharded Plan bit for bit.
     """
 
     mesh_axes: Tuple[Tuple[str, int], ...]
@@ -157,6 +208,7 @@ class ShardSpec:
     axis_k: Optional[str] = None
     axis_n: Optional[Axes] = None
     axis_batch: Optional[Axes] = None
+    axis_g: Optional[str] = None
     schedule: str = "auto"
 
     def __post_init__(self):
@@ -174,7 +226,7 @@ class ShardSpec:
                 f" got {self.schedule!r}"
             )
         seen: List[str] = []
-        for field in ("axis_m", "axis_k", "axis_n", "axis_batch"):
+        for field in ("axis_m", "axis_k", "axis_n", "axis_batch", "axis_g"):
             v = getattr(self, field)
             if isinstance(v, list):
                 v = tuple(v)
@@ -184,6 +236,11 @@ class ShardSpec:
                 raise ValueError(
                     f"axis_k must be a single mesh axis name (the K"
                     f" collectives are 1D rings), got {self.axis_k!r}"
+                )
+            if field == "axis_g" and v is not None and not isinstance(v, str):
+                raise ValueError(
+                    f"axis_g must be a single mesh axis name (the group dim"
+                    f" shards over one EP axis), got {self.axis_g!r}"
                 )
             object.__setattr__(self, field, v)
             for nm in (v,) if isinstance(v, str) else (v or ()):
@@ -208,6 +265,7 @@ class ShardSpec:
         k: Optional[str] = None,
         n: Optional[Axes] = None,
         batch: Optional[Axes] = None,
+        g: Optional[str] = None,
         schedule: str = "auto",
     ) -> "ShardSpec":
         """Partition over a live device mesh by PHYSICAL axis names."""
@@ -217,6 +275,7 @@ class ShardSpec:
             axis_k=k,
             axis_n=n,
             axis_batch=batch,
+            axis_g=g,
             schedule=schedule,
         )
 
@@ -230,11 +289,13 @@ class ShardSpec:
         k: Optional[str] = None,
         n: Optional[str] = None,
         batch: Optional[str] = None,
+        g: Optional[str] = None,
         schedule: str = "auto",
     ) -> "ShardSpec":
-        """Partition by LOGICAL axis names (e.g. m='batch', n='mlp') mapped
-        through a `parallel.sharding.ShardingRules` table; rule axes the mesh
-        doesn't carry are dropped, exactly as in `named_sharding`."""
+        """Partition by LOGICAL axis names (e.g. m='batch', n='mlp',
+        g='experts') mapped through a `parallel.sharding.ShardingRules`
+        table; rule axes the mesh doesn't carry are dropped, exactly as in
+        `named_sharding`."""
         from repro.parallel.sharding import _axes_on_mesh
 
         def phys(logical):
@@ -246,6 +307,7 @@ class ShardSpec:
             k=phys(k),
             n=phys(n),
             batch=phys(batch),
+            g=phys(g),
             schedule=schedule,
         )
 
@@ -270,7 +332,13 @@ class ShardSpec:
         """True when every partition has size 1 (numerically unsharded)."""
         return all(
             self.axis_size(a) == 1
-            for a in (self.axis_m, self.axis_k, self.axis_n, self.axis_batch)
+            for a in (
+                self.axis_m,
+                self.axis_k,
+                self.axis_n,
+                self.axis_batch,
+                self.axis_g,
+            )
         )
 
 
@@ -294,7 +362,11 @@ class GemmSpec:
     resolved by the autotuner at plan time.  `shard` attaches a device-mesh
     partition (ShardSpec): `plan(spec, mesh=mesh)` then returns a ShardedPlan
     lowering the per-shard product through shard_map with a collective
-    schedule.  Hashable and frozen — specs are the plan-cache key.
+    schedule.  `group` attaches a GroupSpec, turning the spec into a grouped
+    (ragged-batch) GEMM: (num_groups * rows_per_group, K) tokens against
+    (num_groups, K, N) stacked weights — `m` is the total row bound and
+    `plan` returns a GroupedPlan.  Hashable and frozen — specs are the
+    plan-cache key.
     """
 
     m: int
@@ -310,6 +382,7 @@ class GemmSpec:
     blocks: Optional[Tuple[Optional[int], Optional[int], Optional[int]]] = None
     stagger: bool = True
     shard: Optional[ShardSpec] = None
+    group: Optional[GroupSpec] = None
 
     def __post_init__(self):
         if self.structure not in STRUCTURES:
@@ -324,6 +397,28 @@ class GemmSpec:
             raise TypeError(
                 f"shard must be a ShardSpec, got {type(self.shard).__name__}"
             )
+        if self.group is not None:
+            if not isinstance(self.group, GroupSpec):
+                raise TypeError(
+                    f"group must be a GroupSpec, got {type(self.group).__name__}"
+                )
+            if self.structure != "general":
+                raise ValueError(
+                    f"grouped specs are structure='general' only (the σ and"
+                    f" symmetric regimes are defined on one product), got"
+                    f" {self.structure!r}"
+                )
+            if self.batch or self.batched_b:
+                raise ValueError(
+                    "grouped specs carry their batching in the GroupSpec;"
+                    " leading batch dims are not supported"
+                )
+            if self.m != self.group.rows:
+                raise ValueError(
+                    f"grouped spec m={self.m} must equal"
+                    f" num_groups*rows_per_group={self.group.rows}"
+                    f" (use GemmSpec.for_groups)"
+                )
         object.__setattr__(self, "batch", tuple(int(d) for d in self.batch))
         object.__setattr__(self, "dtype_a", _dtype_name(self.dtype_a))
         object.__setattr__(self, "dtype_b", _dtype_name(self.dtype_b))
@@ -375,6 +470,37 @@ class GemmSpec:
             shard=shard,
         )
 
+    @classmethod
+    def for_groups(
+        cls,
+        group: GroupSpec,
+        k: int,
+        n: int,
+        *,
+        dtype_a="float32",
+        dtype_b="float32",
+        out_dtype=None,
+        epilogue: Optional[Epilogue] = None,
+        blocks=None,
+        stagger: bool = True,
+        shard: Optional[ShardSpec] = None,
+    ) -> "GemmSpec":
+        """Spec for a grouped GEMM: (group.rows, k) tokens in the capacity
+        layout against (group.num_groups, k, n) stacked weights."""
+        return cls(
+            m=group.rows,
+            k=k,
+            n=n,
+            dtype_a=dtype_a,
+            dtype_b=dtype_b,
+            out_dtype=out_dtype,
+            epilogue=epilogue or Epilogue(),
+            blocks=blocks,
+            stagger=stagger,
+            shard=shard,
+            group=group,
+        )
+
     # -- derived quantities used at plan time --------------------------------
 
     @property
@@ -416,6 +542,8 @@ class BackendCapabilities:
     autotune          consumes autotuned (bm, bn, bk) block shapes
     sharding          per-shard kernel composes under shard_map, so specs
                       with a ShardSpec can lower through a ShardedPlan
+    grouped           executes ragged-batch specs carrying a GroupSpec
+                      (requires a `grouped_impl` at registration)
     """
 
     structures: FrozenSet[str] = frozenset({"general"})
@@ -425,6 +553,7 @@ class BackendCapabilities:
     interpret: bool = True
     autotune: bool = False
     sharding: bool = False
+    grouped: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "structures", frozenset(self.structures))
@@ -439,6 +568,10 @@ _CAP_FIELDS = {f.name for f in dataclasses.fields(BackendCapabilities)}
 
 # impl(plan, a, b, bias, residual) -> array
 BackendImpl = Callable[["Plan", jax.Array, jax.Array, Any, Any], jax.Array]
+# grouped_impl(plan, tokens, group_offsets, weights, bias, residual) -> array
+GroupedImpl = Callable[
+    ["Plan", jax.Array, jax.Array, jax.Array, Any, Any], jax.Array
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -446,6 +579,7 @@ class _Backend:
     name: str
     impl: BackendImpl
     caps: BackendCapabilities
+    grouped_impl: Optional[GroupedImpl] = None
 
 
 _REGISTRY: Dict[str, _Backend] = {}
@@ -469,13 +603,16 @@ def register_backend(
     impl: BackendImpl,
     capabilities: Union[BackendCapabilities, Mapping[str, Any]],
     *,
+    grouped_impl: Optional[GroupedImpl] = None,
     override: bool = False,
 ) -> None:
     """Register a GEMM backend under `name` with declared capabilities.
 
     `capabilities` is a BackendCapabilities or a mapping with only its field
     names — unknown capability keys are rejected so typos never silently grant
-    an ability.  Duplicate names are rejected unless `override=True`.
+    an ability.  Declaring the `grouped` capability requires a matching
+    `grouped_impl` (the ragged-batch entry point has a different operand
+    signature).  Duplicate names are rejected unless `override=True`.
     """
     if not isinstance(capabilities, BackendCapabilities):
         unknown = set(capabilities) - _CAP_FIELDS
@@ -485,11 +622,16 @@ def register_backend(
                 f" known: {sorted(_CAP_FIELDS)}"
             )
         capabilities = BackendCapabilities(**capabilities)
+    if capabilities.grouped and grouped_impl is None:
+        raise ValueError(
+            f"backend {name!r} declares the 'grouped' capability but"
+            " provides no grouped_impl"
+        )
     if name in _REGISTRY and not override:
         raise ValueError(
             f"backend {name!r} already registered (pass override=True to replace)"
         )
-    _REGISTRY[name] = _Backend(name, impl, capabilities)
+    _REGISTRY[name] = _Backend(name, impl, capabilities, grouped_impl)
     _evict_plans(name)
 
 
@@ -532,6 +674,11 @@ def _check_capabilities(spec: GemmSpec, be: _Backend) -> Optional[str]:
         )
     if spec.batched_b and not caps.batching:
         return f"backend {be.name!r} does not support fully-batched operands"
+    if spec.group is not None and not caps.grouped:
+        return (
+            f"backend {be.name!r} does not support grouped (ragged-batch)"
+            f" specs (no 'grouped' capability)"
+        )
     if spec.shard is not None and not caps.sharding:
         return (
             f"backend {be.name!r} does not support device-mesh sharded specs"
@@ -759,6 +906,107 @@ def _mm_bwd(opts, res, g):
 _mm.defvjp(_mm_fwd, _mm_bwd)
 
 
+# -- grouped (ragged-batch) numerics ------------------------------------------
+
+
+def _grouped_valid_mask(sizes: jax.Array, n_groups: int, rpg: int) -> jax.Array:
+    """(rows, 1) f32 segment mask: 1 for rows inside their group's size."""
+    valid = jnp.arange(rpg)[None, :] < sizes[:, None]
+    return valid.reshape(n_groups * rpg, 1).astype(jnp.float32)
+
+
+def _gmm_impl(tokens, sizes, w, bias, residual, opts) -> jax.Array:
+    """Grouped mesh-kernel matmul with K/N padding to block multiples."""
+    block_m, block_n, block_k, stagger, out_dtype, interpret, act = opts
+    n = w.shape[-1]
+    tp = _pad_to(tokens, block_k, -1)
+    wp = _pad_to(_pad_to(w, block_k, -2), block_n, -1)
+    bias_p = None if bias is None else _pad_to(bias, block_n, -1)
+    res_p = None if residual is None else _pad_to(residual, block_n, -1)
+    out = grouped_mesh_matmul_pallas(
+        tp,
+        sizes,
+        wp,
+        bias=bias_p,
+        residual=res_p,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        stagger=stagger,
+        activation=act,
+        out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    return out[:, :n]
+
+
+# Like _mm, pallas_call has no JVP rule, so the grouped kernel carries its own
+# VJP (MoE training differentiates through every expert GEMM).  Forward:
+# y = mask ∘ (act(tokens @ W[g] + bias[g]) + residual).  Backward: the
+# cotangent is segment-masked (forward zeroed padding rows), dz = g·act'(z)
+# with z rematerialized by one plain grouped call, dtokens = grouped(dz, Wᵀ)
+# reuses the ragged kernel with N/K block roles swapped, and dW is the
+# capacity layout's free lunch — a single batched einsum over the (G, rpg)
+# view, padding rows contributing exact zeros.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _gmm(tokens, sizes, w, bias, residual, opts) -> jax.Array:
+    return _gmm_impl(tokens, sizes, w, bias, residual, opts)
+
+
+def _gmm_fwd(tokens, sizes, w, bias, residual, opts):
+    res_sentinel = None if residual is None else jnp.zeros((), residual.dtype)
+    out = _gmm_impl(tokens, sizes, w, bias, residual, opts)
+    return out, (tokens, sizes, w, bias, res_sentinel)
+
+
+def _gmm_bwd(opts, saved, g):
+    tokens, sizes, w, bias, res_sentinel = saved
+    block_m, block_n, block_k, stagger, _, interpret, act = opts
+    n_groups, _, n = w.shape
+    rpg = tokens.shape[0] // n_groups
+    mask = _grouped_valid_mask(sizes, n_groups, rpg)
+    gf = g.astype(jnp.float32) * mask
+    dresidual = None if res_sentinel is None else (gf).astype(res_sentinel.dtype)
+
+    if act in (None, "none"):
+        dz = gf
+    else:
+        opts_z = (block_m, block_n, block_k, stagger, jnp.float32, interpret, None)
+        z = _gmm_impl(
+            tokens.astype(jnp.float32), sizes, w.astype(jnp.float32), None, None, opts_z
+        )
+        if bias is not None:
+            z = (
+                z.reshape(n_groups, rpg, n) + bias[:, None, :].astype(jnp.float32)
+            ).reshape(-1, n)
+        dz = gf * _act_grad(z, act)  # gf already carries the segment mask
+
+    wT = jnp.swapaxes(w, -1, -2).astype(jnp.float32)
+    opts_t = (block_m, block_k, block_n, stagger, jnp.float32, interpret, None)
+    dtokens = _gmm(dz, sizes, wT, None, None, opts_t)
+    dw = jnp.einsum(
+        "grk,grn->gkn",
+        (tokens.astype(jnp.float32) * mask).reshape(n_groups, rpg, -1),
+        dz.reshape(n_groups, rpg, n),
+    )
+    dbias = (
+        None
+        if bias is None
+        else dz.reshape(n_groups, rpg, n).sum(axis=1).astype(bias.dtype)
+    )
+    dsizes = np.zeros(sizes.shape, dtype=jax.dtypes.float0)
+    return (
+        dtokens.astype(tokens.dtype),
+        dsizes,
+        dw.astype(w.dtype),
+        dbias,
+        dresidual,
+    )
+
+
+_gmm.defvjp(_gmm_fwd, _gmm_bwd)
+
+
 # ---------------------------------------------------------------------------
 # Plans
 # ---------------------------------------------------------------------------
@@ -798,7 +1046,7 @@ class Plan:
 
     def describe(self) -> Dict[str, Any]:
         """JSON-able provenance record (benchmarks / serving telemetry)."""
-        return {
+        d = {
             "backend": self.backend,
             "structure": self.spec.structure,
             "mkn": f"{self.spec.eff_m}x{self.spec.k}x{self.spec.n}",
@@ -819,6 +1067,21 @@ class Plan:
             "flops": self.flops,
             "vmem_bytes": self.vmem_bytes,
         }
+        grp = self.spec.group
+        if grp is not None:
+            ia = jnp.dtype(self.spec.dtype_a).itemsize
+            io = jnp.dtype(self.out_dtype).itemsize
+            d["grouped"] = {
+                "num_groups": grp.num_groups,
+                "rows_per_group": grp.rows_per_group,
+                # dense per-group compute at the static capacity bound; the
+                # ragged steering skips the share past each group's size
+                "per_group_flops": 2 * grp.rows_per_group * self.spec.k * self.spec.n,
+                # routing traffic: every token row is scattered in (K bytes)
+                # and its result gathered back out (N bytes)
+                "dispatch_bytes": grp.rows * (self.spec.k * ia + self.spec.n * io),
+            }
+        return d
 
     # -- execution -----------------------------------------------------------
 
@@ -861,15 +1124,77 @@ class Plan:
 
 def _check_epilogue_shapes(bias, residual, spec: GemmSpec) -> None:
     """The `_check_epilogue` contract at the dispatch layer: every backend —
-    XLA included — rejects malformed bias/residual with the same error."""
+    XLA included — rejects malformed bias/residual with the same error.
+    Grouped specs carry a PER-GROUP bias (num_groups, N)."""
     n = spec.n
-    if bias is not None and tuple(bias.shape) != (n,):
-        raise ValueError(f"bias must have shape ({n},), got {tuple(bias.shape)}")
+    want_bias = (spec.group.num_groups, n) if spec.group is not None else (n,)
+    if bias is not None and tuple(bias.shape) != want_bias:
+        raise ValueError(
+            f"bias must have shape {want_bias}, got {tuple(bias.shape)}"
+        )
     want_res = spec.batch + (spec.m, n)
     if residual is not None and tuple(residual.shape) != want_res:
         raise ValueError(
             f"residual must have shape {want_res}, got {tuple(residual.shape)}"
         )
+
+
+def _check_grouped_operands(plan: "Plan", tokens, group_offsets, weights,
+                            bias, residual) -> None:
+    """Operand validation shared by GroupedPlan and ShardedGroupedPlan."""
+    spec = plan.spec
+    grp = spec.group
+    want_t = (grp.rows, spec.k)
+    want_w = (grp.num_groups, spec.k, spec.n)
+    if tuple(tokens.shape) != want_t or tuple(weights.shape) != want_w:
+        raise ValueError(
+            f"grouped operands {tokens.shape} / {weights.shape} do not match"
+            f" plan spec tokens {want_t} / weights {want_w}"
+        )
+    if tuple(group_offsets.shape) != (grp.num_groups + 1,):
+        raise ValueError(
+            f"group_offsets must have shape ({grp.num_groups + 1},) —"
+            f" cumulative row counts — got {tuple(group_offsets.shape)}"
+        )
+    if not jnp.issubdtype(group_offsets.dtype, jnp.integer):
+        raise ValueError(
+            f"group_offsets must be integer-typed, got {group_offsets.dtype}"
+        )
+    got_dt = (_dtype_name(tokens.dtype), _dtype_name(weights.dtype))
+    if got_dt != (spec.dtype_a, spec.dtype_b):
+        raise ValueError(
+            f"operand dtypes {got_dt} do not match plan spec "
+            f"({spec.dtype_a}, {spec.dtype_b}); build a new GemmSpec"
+        )
+    epi = spec.epilogue
+    for name, arr, declared in (
+        ("bias", bias, epi.bias),
+        ("residual", residual, epi.residual),
+    ):
+        if (arr is not None) != declared:
+            state = "with" if declared else "without"
+            raise ValueError(
+                f"plan was built {state} {name}; pass a matching "
+                f"Epilogue in the GemmSpec to change the contract"
+            )
+    _check_epilogue_shapes(bias, residual, spec)
+
+
+@dataclasses.dataclass
+class GroupedPlan(Plan):
+    """A Plan for a grouped (ragged-batch) GEMM (DESIGN.md §10).
+
+    Execution takes `(tokens, group_offsets, weights)` — tokens in the
+    group-major capacity layout, `group_offsets` the (num_groups+1,)
+    cumulative valid-row counts whose diffs are the per-group sizes, weights
+    stacked (num_groups, K, N).  Rows at or beyond a group's size come back
+    zero.  One plan serves every routing outcome of its logical group shape:
+    the offsets are an execution-time operand, not part of the spec.
+    """
+
+    def __call__(self, tokens, group_offsets, weights, bias=None, residual=None):
+        _check_grouped_operands(self, tokens, group_offsets, weights, bias, residual)
+        return self._fn(tokens, group_offsets, weights, bias, residual)
 
 
 @dataclasses.dataclass
@@ -909,6 +1234,7 @@ class ShardedPlan(Plan):
                 "k": shard.axis_k,
                 "n": shard.axis_n,
                 "batch": shard.axis_batch,
+                "g": shard.axis_g,
             },
             "schedule": self.schedule,
             "collective_phases": self.collective_phases,
@@ -923,6 +1249,30 @@ class ShardedPlan(Plan):
             "per_shard_flops": self.local.flops * self.kernel_invocations,
             "per_shard_vmem_bytes": self.local.vmem_bytes,
         }
+        return d
+
+
+@dataclasses.dataclass
+class ShardedGroupedPlan(ShardedPlan):
+    """A GroupedPlan lowered over a device mesh: the `expert` schedule.
+
+    The group (expert) dim shards over `ShardSpec.axis_g`; tokens, sizes and
+    stacked weights reshard at the shard_map boundary — under a pjit caller
+    with data-sharded dispatch buffers this IS the EP all-to-all — and each
+    device runs the ordinary per-shard GroupedPlan over its local groups.
+    Output rows stay group-sharded (no further collective), and the epilogue
+    shards with its operands — per-group bias and group-major residual
+    partition on axis_g, so it stays inside the local kernel (fused on the
+    Pallas backend), unlike the K-collective schedules.
+    """
+
+    __call__ = GroupedPlan.__call__
+
+    def describe(self) -> Dict[str, Any]:
+        d = super().describe()
+        # ShardedPlan forces fused_epilogue=False (post-collective apply);
+        # grouped sharding keeps the epilogue in the local kernel.
+        d["fused_epilogue"] = self.capabilities.epilogue_fusion
         return d
 
 
@@ -974,6 +1324,70 @@ def _pallas_impl(p: Plan, a, b, bias, residual):
     return out.reshape(*spec.batch, spec.m, spec.n)
 
 
+def _grouped_sizes(p: Plan, group_offsets: jax.Array) -> jax.Array:
+    del p
+    return (group_offsets[1:] - group_offsets[:-1]).astype(jnp.int32)
+
+
+def _xla_grouped_impl(p: Plan, tokens, group_offsets, w, bias, residual):
+    """Segment-masked einsum fallback: the capacity layout makes the ragged
+    batch a dense (G, rpg, K) @ (G, K, N) product; the segment mask zeroes
+    rows past each group's size (identical contract to the Pallas kernel)."""
+    grp = p.spec.group
+    sizes = _grouped_sizes(p, group_offsets)
+    rpg = grp.rows_per_group
+    tg = tokens.reshape(grp.num_groups, rpg, p.spec.k)
+    z = jnp.einsum("grk,gkn->grn", tg, w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        z = z + bias[:, None, :].astype(jnp.float32)
+    if p.activation not in (None, "none"):
+        z = ACTIVATIONS[p.activation](z)
+    if residual is not None:
+        z = z + residual.reshape(z.shape).astype(jnp.float32)
+    valid = jnp.arange(rpg)[None, :] < sizes[:, None]
+    z = jnp.where(valid[..., None], z, 0.0)
+    return z.reshape(grp.rows, p.spec.n).astype(p.out_dtype)
+
+
+def _ref_grouped_impl(p: Plan, tokens, group_offsets, w, bias, residual):
+    """Oracle: per-group jnp products in a Python loop (G is static), same
+    epilogue + segment-mask contract as every other grouped backend."""
+    grp = p.spec.group
+    sizes = _grouped_sizes(p, group_offsets)
+    rpg = grp.rows_per_group
+    outs = []
+    for g in range(grp.num_groups):
+        z = jnp.matmul(
+            tokens[g * rpg : (g + 1) * rpg],
+            w[g],
+            preferred_element_type=jnp.float32,
+        )
+        z = apply_epilogue(
+            z,
+            None if bias is None else bias[g],
+            p.activation,
+            None if residual is None else residual[g * rpg : (g + 1) * rpg],
+        )
+        z = jnp.where(jnp.arange(rpg)[:, None] < sizes[g], z, 0.0)
+        outs.append(z)
+    return jnp.concatenate(outs, axis=0).astype(p.out_dtype)
+
+
+def _pallas_grouped_impl(p: Plan, tokens, group_offsets, w, bias, residual):
+    spec = p.spec
+    bm, bn, bk = p.blocks
+    opts = (
+        bm,
+        bn,
+        bk,
+        spec.stagger,
+        jnp.dtype(p.out_dtype),
+        p.interpret,
+        spec.epilogue.activation,
+    )
+    return _gmm(tokens, _grouped_sizes(p, group_offsets), w, bias, residual, opts)
+
+
 register_backend(
     "xla",
     _xla_impl,
@@ -985,7 +1399,9 @@ register_backend(
         interpret=True,  # native everywhere
         autotune=False,
         sharding=True,
+        grouped=True,
     ),
+    grouped_impl=_xla_grouped_impl,
 )
 register_backend(
     "pallas_mesh",
@@ -998,7 +1414,9 @@ register_backend(
         interpret=True,  # Pallas interpret mode off-TPU
         autotune=True,
         sharding=True,
+        grouped=True,
     ),
+    grouped_impl=_pallas_grouped_impl,
 )
 register_backend(
     "ref",
@@ -1011,7 +1429,9 @@ register_backend(
         interpret=True,
         autotune=False,
         sharding=True,
+        grouped=True,
     ),
+    grouped_impl=_ref_grouped_impl,
 )
 
 
@@ -1034,7 +1454,9 @@ def plan(
     backend is chosen (pinned default → xla → pallas_mesh → registration
     order).  A spec carrying a ShardSpec requires the live device `mesh` and
     returns a ShardedPlan; equal meshes (same devices + axis names) key the
-    same cache entry, different meshes plan separately.
+    same cache entry, different meshes plan separately.  A spec carrying a
+    GroupSpec returns a GroupedPlan taking (tokens, group_offsets, weights)
+    — and, with a ShardSpec too, a ShardedGroupedPlan (`expert` schedule).
     """
     if not isinstance(spec, GemmSpec):
         raise TypeError(f"plan() takes a GemmSpec, got {type(spec).__name__}")
@@ -1068,7 +1490,66 @@ def plan(
     return p
 
 
+def _grouped_block_m(rpg: int, bm: int) -> int:
+    """Largest block_m that both divides rows_per_group and respects the
+    tuned bm — the (g, i, j, k) grid needs whole row blocks per group."""
+    if rpg % bm == 0:
+        return bm
+    g = math.gcd(rpg, bm)
+    return g if g >= 8 else rpg
+
+
+def _build_grouped_plan(spec: GemmSpec, be: _Backend) -> GroupedPlan:
+    """Grouped planning: autotune ONCE per logical group shape (m = the
+    rows-per-group bound), then clamp block_m to divide it."""
+    grp = spec.group
+    blocks = vmem = stagger_tbl = None
+    if be.caps.autotune:
+        partial = spec.blocks or (None, None, None)
+        if None in partial:
+            bm, bn, bk = _autotune.resolve_blocks(
+                grp.rows_per_group, spec.k, spec.n, spec.acc_dtype, be.name
+            )
+            blocks = tuple(p or r for p, r in zip(partial, (bm, bn, bk)))
+        else:
+            blocks = partial
+        bm, bn, bk = blocks
+        blocks = (_grouped_block_m(grp.rows_per_group, bm), bn, bk)
+        vmem = _autotune.vmem_bytes(
+            *blocks,
+            spec.acc_dtype,
+            has_bias=spec.epilogue.bias,
+            has_residual=spec.epilogue.residual,
+        )
+        if spec.stagger:
+            bm, bn, bk = blocks
+            nm = grp.rows_per_group // bm
+            nn = -(-spec.n // bn)
+            nk = -(-spec.k // bk)
+            # (g + i + j) mod nk rotation per group tile, recorded for one
+            # group (the pattern shifts by g across groups)
+            stagger_tbl = np.add.outer(np.arange(nm), np.arange(nn)) % max(nk, 1)
+    p = GroupedPlan(
+        spec=spec,
+        backend=be.name,
+        capabilities=be.caps,
+        blocks=blocks,
+        out_dtype=spec.resolved_out_dtype(),
+        interpret=not _on_tpu(),
+        flops=spec.flops(),
+        vmem_bytes=vmem,
+        stagger_table=stagger_tbl,
+    )
+    impl = be.grouped_impl
+    p._fn = jax.jit(
+        lambda t, off, w, bias, residual: impl(p, t, off, w, bias, residual)
+    )
+    return p
+
+
 def _build_plan(spec: GemmSpec, be: _Backend) -> Plan:
+    if spec.group is not None:
+        return _build_grouped_plan(spec, be)
     acc_dtype = spec.acc_dtype
     blocks = None
     vmem = None
@@ -1156,6 +1637,13 @@ def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
     f32, structure folded to 'general' (per-shard tiles are rectangular).
     """
     shard = spec.shard
+    if spec.group is not None:
+        return _resolve_grouped_sharding(spec)
+    if shard.axis_g is not None:
+        raise ValueError(
+            "axis_g partitions the group dim of a GROUPED spec; this spec"
+            " carries no GroupSpec"
+        )
     if spec.structure == "scrambled":
         raise ValueError(
             "structure='scrambled' does not compose with a ShardSpec: the"
@@ -1178,6 +1666,11 @@ def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
             sched = "reduce_scatter_k" if eff_m % pk == 0 else "ring_k"
         else:
             sched = "replicated"
+    if sched == "expert":
+        raise ValueError(
+            "schedule 'expert' shards the group dim of a GROUPED spec;"
+            " this spec carries no GroupSpec"
+        )
 
     def div(what: str, dim: int, axes, p: int) -> int:
         if dim % p:
@@ -1271,6 +1764,103 @@ def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
         shard=None,
     )
     return sched, local, bytes_moved, phases
+
+
+def _resolve_grouped_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
+    """The grouped analogue of `_resolve_sharding`: the only meaningful
+    partition is the group (expert) dim over `axis_g` — the `expert`
+    schedule.  Tokens/sizes/weights reshard at the shard_map boundary (the
+    EP all-to-all); there is no in-body collective, so bytes_moved reports
+    the boundary resharding cost."""
+    shard = spec.shard
+    grp = spec.group
+    for field in ("axis_m", "axis_k", "axis_n", "axis_batch"):
+        if getattr(shard, field) is not None and shard.axis_size(getattr(shard, field)) > 1:
+            raise ValueError(
+                f"grouped specs shard only the group dim (axis_g);"
+                f" drop {field}"
+            )
+    pg = shard.axis_size(shard.axis_g)
+    sched = shard.schedule
+    if sched == "auto":
+        sched = "expert" if pg > 1 else "replicated"
+    if sched not in ("expert", "replicated"):
+        raise ValueError(
+            f"schedule {sched!r} does not apply to grouped specs; use"
+            " 'expert' (group dim over axis_g) or 'replicated'"
+        )
+    if sched == "replicated" and pg > 1:
+        raise ValueError(
+            "schedule 'replicated' cannot shard the group dim; use 'expert'"
+        )
+    if grp.num_groups % pg:
+        raise ValueError(
+            f"num_groups={grp.num_groups} is not divisible by mesh axis"
+            f" {shard.axis_g!r} (size {pg}) required by schedule 'expert'"
+            f" on mesh {shard.mesh_axes}"
+        )
+    local_grp = GroupSpec(grp.num_groups // pg, grp.rows_per_group)
+    local = dataclasses.replace(
+        spec, m=local_grp.rows, group=local_grp, shard=None
+    )
+    if pg > 1:
+        ia = jnp.dtype(spec.dtype_a).itemsize
+        io = jnp.dtype(spec.resolved_out_dtype()).itemsize
+        # boundary all-to-all: (p-1)/p of the token rows change device on the
+        # way in, and again on the way out
+        bytes_moved = (pg - 1) * grp.rows * (spec.k * ia + spec.n * io) // pg
+        phases = pg - 1
+    else:
+        bytes_moved, phases = 0, 0
+    return ("expert" if pg > 1 else "replicated"), local, bytes_moved, phases
+
+
+def _grouped_sharded_executor(
+    spec: GemmSpec, sched: str, mesh: Mesh, local_plan: Plan
+) -> Callable:
+    """shard_map executor for grouped specs: group-sharded tokens/sizes/
+    weights in, group-sharded output rows out, local GroupedPlan in the body."""
+    from repro.parallel.sharding import shard_map as _shard_map
+
+    ag = spec.shard.axis_g if sched == "expert" else None
+    epi = spec.epilogue
+
+    def body(t_blk, sz_blk, w_blk, *rest):
+        it = iter(rest)
+        bias_blk = next(it) if epi.bias else None
+        res_blk = next(it) if epi.residual else None
+        off = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(sz_blk).astype(jnp.int32)]
+        )
+        return local_plan._fn(t_blk, off, w_blk, bias_blk, res_blk)
+
+    # The epilogue is per-row / per-group (no cross-device reduction), so it
+    # shards with its operands: bias (G, N) and residual (rows, group-major)
+    # both partition on the group axis — unlike the K-collective schedules,
+    # nothing has to move post-collective.
+    in_specs = [P(ag, None), P(ag), P(ag, None, None)]
+    if epi.bias:
+        in_specs.append(P(ag, None))
+    if epi.residual:
+        in_specs.append(P(ag, None))
+    mapped = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=tuple(in_specs),
+        out_specs=P(ag, None),
+        check_vma=False,
+    )
+
+    def run(tokens, group_offsets, weights, bias, residual):
+        sizes = (group_offsets[1:] - group_offsets[:-1]).astype(jnp.int32)
+        args = [tokens, sizes, weights]
+        if epi.bias:
+            args.append(bias)
+        if epi.residual:
+            args.append(residual)
+        return mapped(*args)
+
+    return jax.jit(run)
 
 
 def _sharded_executor(
@@ -1381,9 +1971,10 @@ def _build_sharded_plan(spec: GemmSpec, be: _Backend, mesh: Mesh) -> ShardedPlan
     sched, local_spec, bytes_moved, phases = _resolve_sharding(spec)
     local_plan = plan(local_spec, backend=be.name)
     # allgather_a / reduce_scatter_k run the local kernel once per ring step
-    # (p = phases + 1); replicated and ring_k invoke it exactly once.
+    # (p = phases + 1); replicated, ring_k and expert invoke it exactly once.
     invocations = phases + 1 if sched in ("allgather_a", "reduce_scatter_k") else 1
-    p = ShardedPlan(
+    cls = ShardedGroupedPlan if spec.group is not None else ShardedPlan
+    p = cls(
         spec=spec,
         backend=be.name,
         capabilities=be.caps,
@@ -1401,7 +1992,10 @@ def _build_sharded_plan(spec: GemmSpec, be: _Backend, mesh: Mesh) -> ShardedPlan
         collective_phases=phases,
         kernel_invocations=invocations,
     )
-    p._fn = _sharded_executor(spec, sched, mesh, local_plan)
+    executor = (
+        _grouped_sharded_executor if spec.group is not None else _sharded_executor
+    )
+    p._fn = executor(spec, sched, mesh, local_plan)
     return p
 
 

@@ -1,0 +1,237 @@
+"""Pallas TPU kernel: grouped (ragged-batch) matmul on the mesh-array schedule.
+
+The MoE regime is exactly the paper's repeated-multiplication setting (Kak,
+"Efficiency of Matrix Multiplication on the Cross-Wired Mesh Array"): every
+layer issues dozens of small per-expert GEMMs that share K/N but differ in
+(ragged) row count.  This kernel runs them all as ONE `pallas_call`:
+
+  * **Capacity layout** — tokens arrive concatenated group-major in a
+    (num_groups * rows_per_group, K) buffer; group g owns rows
+    [g*rows_per_group, g*rows_per_group + size_g).  `rows_per_group` is the
+    static bound (`GroupSpec`), the per-group `sizes` are runtime values.
+  * **Scalar-prefetched ragged steering** — the per-group row counts ride in
+    SMEM via scalar prefetch, steering the (g, i, j, k) grid: a row block
+    whose rows all fall beyond its group's size skips the MXU work entirely
+    (empty experts cost zero dot products), and the flush masks rows past
+    the group boundary to zero.
+  * **Staggered k-loop per group tile** — cell (g, i, j) contracts in the
+    rotated order (g + i + j + k) mod nk, the same no-padding feeding
+    discipline as `mesh_matmul_pallas` (DESIGN.md §2), now spread across
+    groups as well so concurrently-active cells stream disjoint K slabs.
+  * **Fused epilogue per group tile** — optional per-group bias (G, N),
+    activation, and residual (rows, N) execute in the k == nk-1 flush while
+    the f32 accumulator is in VMEM (DESIGN.md §3).
+
+Contract: output row r is tokens[r] @ weights[r // rows_per_group]; rows at
+or beyond a group's size are ZERO (whatever the padding rows contain).  The
+pure-jnp oracle is `repro.kernels.ref.grouped_matmul_ref`; the plan/execute
+integration (including the custom VJP for training) lives in
+`repro.kernels.api`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.mesh_matmul import ACTIVATIONS, _HAVE_PLTPU
+
+if _HAVE_PLTPU:
+    from jax.experimental.pallas import tpu as pltpu
+else:  # pragma: no cover
+    pltpu = None
+
+__all__ = ["grouped_mesh_matmul_pallas"]
+
+
+def _make_grouped_kernel(
+    *, nk: int, block_m: int, activation: Optional[str], has_bias: bool,
+    has_residual: bool
+):
+    """Kernel body for one fused-operand configuration.
+
+    Ref order (after the scalar-prefetch sizes table): a, b, [bias],
+    [residual], out, acc_scratch.
+    """
+    act = ACTIVATIONS[activation]
+
+    def kernel(sz_ref, *refs):
+        refs = list(refs)
+        a_ref, b_ref = refs[0], refs[1]
+        pos = 2
+        bias_ref = res_ref = None
+        if has_bias:
+            bias_ref, pos = refs[pos], pos + 1
+        if has_residual:
+            res_ref, pos = refs[pos], pos + 1
+        o_ref, acc_ref = refs[pos], refs[pos + 1]
+
+        g = pl.program_id(0)
+        i = pl.program_id(1)
+        k = pl.program_id(3)
+        size = sz_ref[g]
+        row0 = i * block_m
+
+        @pl.when(k == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # Ragged steering: a row block entirely past its group's size has no
+        # valid rows — skip the dot (the paper's "no zeros are padded" as
+        # skipped MXU issue slots for empty/short groups).
+        @pl.when(row0 < size)
+        def _accumulate():
+            acc_ref[...] += jnp.dot(
+                a_ref[...], b_ref[0], preferred_element_type=jnp.float32
+            )
+
+        @pl.when(k == nk - 1)
+        def _flush():
+            out = acc_ref[...]
+            if bias_ref is not None:
+                out = out + bias_ref[...].astype(jnp.float32)  # (1, bn) bcast
+            out = act(out)
+            if res_ref is not None:
+                out = out + res_ref[...].astype(jnp.float32)
+            rows = row0 + jax.lax.broadcasted_iota(jnp.int32, out.shape, 0)
+            out = jnp.where(rows < size, out, 0.0)
+            o_ref[...] = out.astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block_m",
+        "block_n",
+        "block_k",
+        "stagger",
+        "activation",
+        "out_dtype",
+        "interpret",
+    ),
+)
+def grouped_mesh_matmul_pallas(
+    tokens: jax.Array,      # (num_groups * rows_per_group, K), group-major
+    sizes: jax.Array,       # (num_groups,) int32 valid-row counts
+    weights: jax.Array,     # (num_groups, K, N)
+    *,
+    bias: Optional[jax.Array] = None,       # (num_groups, N), per-group
+    residual: Optional[jax.Array] = None,   # (rows, N)
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    stagger: bool = True,
+    activation: Optional[str] = None,
+    out_dtype: Optional[jnp.dtype] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[r] = epilogue(tokens[r] @ weights[r // rows_per_group]); zero past
+    each group's size.  rows_per_group must divide by block_m, K by block_k,
+    N by block_n (the api-layer wrapper pads K/N)."""
+    if not _HAVE_PLTPU:
+        raise NotImplementedError(
+            "grouped_mesh_matmul_pallas needs jax.experimental.pallas.tpu"
+            " (scalar-prefetch grid specs); use the xla grouped backend on"
+            " this jax build"
+        )
+    rows, k_dim = tokens.shape
+    n_groups, k2, n = weights.shape
+    if k_dim != k2:
+        raise ValueError(f"contraction mismatch: {tokens.shape} @ {weights.shape}")
+    if rows % n_groups:
+        raise ValueError(
+            f"rows={rows} not divisible by num_groups={n_groups}"
+            " (capacity layout requires equal static per-group bounds)"
+        )
+    rpg = rows // n_groups
+    if rpg % block_m or n % block_n or k_dim % block_k:
+        raise ValueError(
+            f"grouped shape (rpg={rpg}, K={k_dim}, N={n}) not divisible by"
+            f" blocks ({block_m},{block_n},{block_k})"
+        )
+    if sizes.shape != (n_groups,):
+        raise ValueError(f"sizes must have shape ({n_groups},), got {sizes.shape}")
+    if bias is not None and bias.shape != (n_groups, n):
+        raise ValueError(
+            f"grouped bias must have shape ({n_groups}, {n}), got {bias.shape}"
+        )
+    if residual is not None and residual.shape != (rows, n):
+        raise ValueError(
+            f"residual must have shape ({rows}, {n}), got {residual.shape}"
+        )
+    if activation not in ACTIVATIONS:
+        raise ValueError(
+            f"activation must be one of {sorted(k for k in ACTIVATIONS if k)},"
+            f" got {activation!r}"
+        )
+    out_dtype = out_dtype or jnp.result_type(tokens.dtype, weights.dtype)
+    nm, nn, nk = rpg // block_m, n // block_n, k_dim // block_k
+    grid = (n_groups, nm, nn, nk)
+
+    def kk_of(g, i, j, k):
+        return jax.lax.rem(g + i + j + k, nk) if stagger else k
+
+    # index_maps: the sizes table is consumed only by the kernel body (ragged
+    # steering); block placement is static given the capacity layout.
+    def a_map(g, i, j, k, sz):
+        del sz
+        return g * nm + i, kk_of(g, i, j, k)
+
+    def b_map(g, i, j, k, sz):
+        del sz
+        return g, kk_of(g, i, j, k), j
+
+    def bias_map(g, i, j, k, sz):
+        del i, k, sz
+        return g, j
+
+    def out_map(g, i, j, k, sz):
+        del k, sz
+        return g * nm + i, j
+
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), a_map),
+        pl.BlockSpec((1, block_k, block_n), b_map),
+    ]
+    operands = [tokens, weights]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, block_n), bias_map))
+        operands.append(bias)
+    if residual is not None:
+        in_specs.append(pl.BlockSpec((block_m, block_n), out_map))
+        operands.append(residual)
+
+    scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)]
+    compiler_params = None
+    if _HAVE_PLTPU and not interpret:  # pragma: no cover — TPU-only path
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        )
+
+    kernel = _make_grouped_kernel(
+        nk=nk,
+        block_m=block_m,
+        activation=activation,
+        has_bias=bias is not None,
+        has_residual=residual is not None,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), out_map),
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, n), out_dtype),
+        compiler_params=compiler_params,
+        interpret=interpret,
+    )(sizes.astype(jnp.int32), *operands)

@@ -13,6 +13,7 @@ import numpy as np
 from repro.core.scramble import _scramble_perm_np
 
 __all__ = [
+    "grouped_matmul_ref",
     "matmul_ref",
     "mesh_matmul_ref",
     "scramble_blocks_ref",
@@ -77,3 +78,25 @@ def unscramble_blocks_ref(x: jax.Array, *, block_m: int, block_n: int) -> jax.Ar
     out = gathered.reshape(*lead, g, g, block_m, block_n)
     out = jnp.moveaxis(out, -2, -3)
     return out.reshape(*lead, m, n)
+
+
+def grouped_matmul_ref(
+    tokens: jax.Array,   # (num_groups * rows_per_group, K), group-major
+    sizes: jax.Array,    # (num_groups,) valid-row counts
+    weights: jax.Array,  # (num_groups, K, N)
+    out_dtype=None,
+) -> jax.Array:
+    """Grouped (ragged-batch) matmul oracle: row r of the capacity-layout
+    buffer multiplies its group's weight slab; rows at or beyond a group's
+    size are zero regardless of their contents (the grouped-kernel contract,
+    DESIGN.md §10)."""
+    n_groups, k, n = weights.shape
+    rpg = tokens.shape[0] // n_groups
+    out_dtype = out_dtype or jnp.result_type(tokens.dtype, weights.dtype)
+    tg = tokens.reshape(n_groups, rpg, k)
+    z = jnp.einsum(
+        "grk,gkn->grn", tg, weights, preferred_element_type=jnp.float32
+    )
+    valid = jnp.arange(rpg)[None, :] < sizes[:, None]  # (G, rpg) segment mask
+    z = jnp.where(valid[..., None], z, 0.0)
+    return z.reshape(n_groups * rpg, n).astype(out_dtype)

@@ -114,13 +114,18 @@ def analyze_plan(desc: Dict[str, Any]) -> Dict[str, Any]:
     the collective's bytes-moved, so the communication cost of a schedule is
     reportable before any profile exists (serve `--plan-stats`, the sharded
     bench).  Unsharded plans get a zero collective term through the same
-    arithmetic.
+    arithmetic.  Grouped plans (a "grouped" provenance record) decompose
+    into per-group compute terms — rows stream once but every group's
+    weight slab streams — plus the dispatch (scatter/gather routing) bytes;
+    unknown record shapes degrade to the plain-GEMM arithmetic instead of
+    raising.
     """
     import math as _math
 
     import numpy as _np
 
     sh = desc.get("sharding") or {}
+    grp = desc.get("grouped") or {}
     flops = sh.get("per_shard_flops", desc["flops"])
     if "per_shard_mkn" in sh:
         m, k, n = sh["per_shard_mkn"]
@@ -135,11 +140,32 @@ def analyze_plan(desc: Dict[str, Any]) -> Dict[str, Any]:
     # Ring schedules re-invoke the per-shard kernel once per step: the device
     # streams `inv` A chunks and writes `inv` output tiles per call.
     inv = sh.get("kernel_invocations", 1)
-    hbm_bytes = nb * (
-        inv * m * k * _np.dtype(dt_a).itemsize
-        + k * n * _np.dtype(dt_b).itemsize
-        + inv * m * n * _np.dtype(desc["out_dtype"]).itemsize
-    )
+    if grp:
+        # Grouped: M is the total row bound (rows stream once), but the
+        # weight term is per GROUP — every (K, N) slab streams — and the
+        # sort/scatter/gather routing traffic rides the memory term too.
+        n_groups = grp.get("num_groups", 1)
+        dispatch_bytes = grp.get("dispatch_bytes", 0)
+        if sh:
+            # expert schedule: `m` above is already the per-shard row count
+            # (per_shard_mkn); scale group count and dispatch traffic to the
+            # per-device share using the group axis size from the record
+            mesh_sizes = {nm: s for nm, s in sh.get("mesh", [])}
+            pg = mesh_sizes.get((sh.get("axes") or {}).get("g"), 1) or 1
+            n_groups = max(1, n_groups // pg)
+            dispatch_bytes //= pg
+        hbm_bytes = (
+            m * k * _np.dtype(dt_a).itemsize
+            + n_groups * k * n * _np.dtype(dt_b).itemsize
+            + m * n * _np.dtype(desc["out_dtype"]).itemsize
+            + dispatch_bytes
+        )
+    else:
+        hbm_bytes = nb * (
+            inv * m * k * _np.dtype(dt_a).itemsize
+            + k * n * _np.dtype(dt_b).itemsize
+            + inv * m * n * _np.dtype(desc["out_dtype"]).itemsize
+        )
     coll_bytes = sh.get("bytes_moved", 0)
     terms = {
         "compute": flops / PEAK_FLOPS,
@@ -147,7 +173,7 @@ def analyze_plan(desc: Dict[str, Any]) -> Dict[str, Any]:
         "collective": coll_bytes / LINK_BW,
     }
     dominant = max(terms, key=terms.get)
-    return {
+    out = {
         "backend": desc["backend"],
         "mkn": desc["mkn"],
         "schedule": sh.get("schedule"),
@@ -161,6 +187,16 @@ def analyze_plan(desc: Dict[str, Any]) -> Dict[str, Any]:
         "t_bound_s": terms[dominant],
         "hint": _HINTS[dominant],
     }
+    if grp:
+        out["grouped"] = {
+            "num_groups": grp.get("num_groups"),
+            "rows_per_group": grp.get("rows_per_group"),
+            "per_group_flops": grp.get("per_group_flops"),
+            "per_group_t_compute_s": grp.get("per_group_flops", 0) / PEAK_FLOPS,
+            "dispatch_bytes": grp.get("dispatch_bytes", 0),
+            "t_dispatch_s": grp.get("dispatch_bytes", 0) / HBM_BW,
+        }
+    return out
 
 
 def analyze_dir(path: str) -> List[Dict[str, Any]]:

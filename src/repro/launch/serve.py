@@ -42,7 +42,9 @@ def report_plan_cache(prefix: str = "[serve]") -> dict:
     mesh) triple is planned at most once per process, and this report is the
     observable proof (hits = executions that reused an existing plan).
     Sharded plans additionally report their collective schedule and the
-    roofline communication cost derived from bytes-moved provenance.
+    roofline communication cost derived from bytes-moved provenance;
+    grouped plans (MoE expert shapes) report groups x rows-per-group,
+    per-group FLOPs, and dispatch (routing) bytes.
     """
     from repro.launch.roofline import analyze_plan
 
@@ -69,10 +71,18 @@ def report_plan_cache(prefix: str = "[serve]") -> dict:
             )
         else:
             shard_s = "-"
+        grp = p.get("grouped")
+        grp_s = (
+            f"{grp['num_groups']}x{grp['rows_per_group']} "
+            f"pgflops={grp['per_group_flops']:.1e} "
+            f"dispatch={grp['dispatch_bytes']}B"
+            if grp
+            else "-"
+        )
         print(
             f"{prefix}   {p['backend']:11s} {p['structure']:9s} "
             f"{p['mkn']:>18s} batch={p['batch'] or '-'} blocks={blocks} "
-            f"epi={epi_s:12s} flops={p['flops']:.2e} shard={shard_s}"
+            f"epi={epi_s:12s} flops={p['flops']:.2e} grp={grp_s} shard={shard_s}"
         )
     return info
 

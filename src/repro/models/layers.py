@@ -37,6 +37,7 @@ __all__ = [
     "apply_rope",
     "softmax_xent",
     "gemm",
+    "grouped_gemm",
 ]
 
 
@@ -174,6 +175,48 @@ def gemm(
         shard=shard,
     )
     return _api.plan(spec, backend=backend, mesh=mesh)(x, w, bias=bias, residual=residual)
+
+
+def grouped_gemm(
+    tokens: jax.Array,         # (num_groups * rows_per_group, K), group-major
+    group_offsets: jax.Array,  # (num_groups + 1,) cumulative valid-row counts
+    weights: jax.Array,        # (num_groups, K, N) stacked per-group slabs
+    cfg,
+    *,
+    out_dtype=None,
+    mesh: Any = None,
+    shard: Any = None,
+) -> jax.Array:
+    """Config-routed grouped (ragged-batch) GEMM via plan/execute.
+
+    The MoE expert path: row blocks of the capacity-layout `tokens` buffer
+    multiply their group's (K, N) weight slab in ONE kernel (the Pallas
+    ragged mesh kernel when cfg.use_mesh_kernel, a segment-masked einsum on
+    XLA), with rows past each group's size coming back zero.  Plans are
+    cached per logical group shape exactly like `gemm` — one autotune, one
+    executable, every layer/step reuses it.  With `shard` (a ShardSpec
+    carrying axis_g) and the live `mesh`, the plan lowers through the
+    `expert` collective schedule (EP).
+    """
+    backend = "pallas_mesh" if getattr(cfg, "use_mesh_kernel", False) else "xla"
+    num_groups, kd, n = weights.shape
+    rows = tokens.shape[0]
+    blocks = (
+        getattr(cfg, "mesh_block_m", 0) or None,
+        getattr(cfg, "mesh_block_n", 0) or None,
+        getattr(cfg, "mesh_block_k", 0) or None,
+    )
+    spec = _api.GemmSpec.for_groups(
+        _api.GroupSpec(num_groups, rows // num_groups),
+        k=kd,
+        n=n,
+        dtype_a=tokens.dtype,
+        dtype_b=weights.dtype,
+        out_dtype=out_dtype or tokens.dtype,
+        blocks=blocks,
+        shard=shard,
+    )
+    return _api.plan(spec, backend=backend, mesh=mesh)(tokens, group_offsets, weights)
 
 
 def dense(

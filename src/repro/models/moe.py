@@ -1,16 +1,22 @@
 """Mixture-of-Experts block: token-choice top-k routing, shared experts, EP.
 
-Switch/Mesh-TF *grouped* dense-dispatch: tokens are reshaped to
-(groups, group_size) with groups aligned to the data-sharded batch dim, and
-每 group dispatches into per-expert capacity buffers via one-hot einsums.
-Capacity scales with group_size (cap = cf * s * k / e), so the dispatch
-tensor is (G, s, e, cap) with G sharded over ('pod','data') and e over
-'model' — bounded per-device memory at any scale (DESIGN.md §4).  Small
-groups (s <= 256: decode steps, smoke tests) use cap = s, i.e. exact
-drop-free routing.
+Expert compute rides the grouped-GEMM planner (DESIGN.md §10): each group
+dispatches its tokens by *sort/segment permutation* — every (token, choice)
+pair is ranked within its expert and scattered into a group-major capacity
+buffer (expert e owns rows [e*rows_per_group, e*rows_per_group + size_e)) —
+and the two expert projections run as grouped plans
+(`layers.grouped_gemm`), ONE ragged kernel per projection instead of the
+old one-hot dispatch/combine einsum chain over a (G, s, e, cap) tensor.
+Capacity scales exactly as before (cap = cf * n * k / e at scale), so
+per-device memory stays bounded; small token counts (n or per-group s <=
+256: decode steps, smoke tests) use cap = n, i.e. exact drop-free routing —
+on those shapes the refactor is output-identical to dense dispatch.
 
-EP mapping: the expert dim maps to 'model' when divisible (OLMoE 64 % 16 == 0)
-else the expert hidden dim is TP-sharded (Qwen2-MoE: 60 experts).
+EP mapping: the expert dim maps to 'model' when divisible (OLMoE 64 % 16 ==
+0) else the expert hidden dim is TP-sharded (Qwen2-MoE: 60 experts).  The
+capacity buffer's row dim is expert-major, so the 'expert_rows' rule shards
+it the same way — and the planner's `expert` collective schedule
+(ShardSpec.axis_g) covers explicit EP meshes.
 
 Aux: Switch load-balance loss + router z-loss, returned for the train loop.
 """
@@ -22,12 +28,13 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import PSpec, ShardCtx, gemm
+from repro.models.layers import PSpec, ShardCtx, gemm, grouped_gemm
 
 __all__ = ["moe_specs", "moe_block", "swiglu_specs", "swiglu"]
 
-_GROUP_SIZE = 1024  # tokens per dispatch group at scale
+_GROUP_SIZE = 1024  # tokens per dispatch group at scale (capacity scaling)
 _EXACT_GROUP = 256  # groups this small route exactly (no capacity drops)
+_ROW_ALIGN = 8      # capacity rounds up so row blocks tile the ragged grid
 
 
 def swiglu_specs(cfg, d_ff: int) -> Dict[str, PSpec]:
@@ -68,6 +75,19 @@ def moe_specs(cfg) -> Dict[str, PSpec]:
     return specs
 
 
+def _capacity(n: int, t: int, e: int, k: int, capacity_factor: float) -> int:
+    """Per-expert row capacity, preserving the dense-dispatch scaling: tokens
+    notionally split into (n // s) groups of s = min(_GROUP_SIZE, ...), each
+    granting cf * s * k / e slots — except small groups, which route exactly
+    (cap = n, drop-free)."""
+    s = min(_GROUP_SIZE, t) if t > 1 else min(_GROUP_SIZE, n)
+    while n % s:
+        s //= 2
+    if s <= _EXACT_GROUP:
+        return n
+    return (n // s) * max(1, int(capacity_factor * s * k / e))
+
+
 def moe_block(
     p: Dict[str, jax.Array],
     x: jax.Array,  # (B, T, D)
@@ -81,62 +101,74 @@ def moe_block(
     e, k = cfg.num_experts, cfg.num_experts_per_tok
     n = b * t
 
-    # Group tokens along the (batch-sharded) leading dims: (G, s, d).
-    s = min(_GROUP_SIZE, t) if t > 1 else min(_GROUP_SIZE, n)
-    while n % s:
-        s //= 2
-    g = n // s
-    cap = s if s <= _EXACT_GROUP else max(1, int(capacity_factor * s * k / e))
-
-    xg = x.reshape(g, s, d)
-    xg = ctx.c(xg, ("batch", None, "embed"))
+    xf = x.reshape(n, d)
+    xf = ctx.c(xf, ("batch", "embed"))
     logits = jnp.einsum(
-        "gsd,de->gse", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+        "nd,de->ne", xf.astype(jnp.float32), p["router"].astype(jnp.float32)
     )
     probs = jax.nn.softmax(logits, axis=-1)
 
-    topv, topi = jax.lax.top_k(probs, k)  # (g, s, k)
+    topv, topi = jax.lax.top_k(probs, k)  # (n, k)
     topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
 
-    # Position of each (token, choice) in its expert's buffer, within-group.
-    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)  # (g, s, k, e)
-    flat = onehot.reshape(g, s * k, e)
-    pos = (jnp.cumsum(flat, axis=1) - 1.0).reshape(g, s, k, e)
-    pos = jnp.sum(pos * onehot, axis=-1)  # (g, s, k)
-    keep = pos < cap
-    gate = topv * keep.astype(topv.dtype)
+    cap = _capacity(n, t, e, k, capacity_factor)
+    rpg = -(-cap // _ROW_ALIGN) * _ROW_ALIGN  # static rows-per-group bound
+    rows = e * rpg
 
-    # (g, s, e, cap) dispatch tensor: token -> (expert, slot).
-    cap_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=xg.dtype)  # (g, s, k, cap)
-    onehot_keep = onehot.astype(xg.dtype) * keep[..., None].astype(xg.dtype)
-    disp = jnp.einsum("gske,gskc->gsec", onehot_keep, cap_oh)
-    ex_in = jnp.einsum("gsec,gsd->gecd", disp, xg)  # (g, e, cap, d)
-    ex_in = ctx.c(ex_in, ("batch", "experts", None, "embed"))
+    # Sort/segment permutation: rank each (token, choice) pair within its
+    # expert (stable sort keeps token order), keep the first `cap`, and
+    # scatter kept tokens into the group-major capacity buffer the grouped
+    # planner consumes.  Replaces the (G, s, e, cap) one-hot dispatch einsum.
+    flat_e = topi.reshape(-1)  # (n*k,) expert id per pair, token-major
+    flat_t = jnp.repeat(jnp.arange(n), k)  # token id per pair
+    order = jnp.argsort(flat_e)  # stable: pairs grouped by expert
+    counts = jnp.bincount(flat_e, length=e)  # (e,) demand per expert
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(n * k) - starts[flat_e[order]]
+    rank = jnp.zeros((n * k,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < cap
+    gate = topv.reshape(-1) * keep.astype(topv.dtype)
+    dest = jnp.where(keep, flat_e * rpg + rank, rows)  # rows => dropped
 
-    gate_up = jnp.einsum("gecd,edf->gecf", ex_in, p["wi"])
+    sizes = jnp.minimum(counts, cap)
+    group_offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes).astype(jnp.int32)]
+    )
+
+    buf = (
+        jnp.zeros((rows, d), x.dtype).at[dest].set(xf[flat_t], mode="drop")
+    )
+    buf = ctx.c(buf, ("expert_rows", "embed"))
+
+    gate_up = grouped_gemm(buf, group_offsets, p["wi"], cfg)  # (rows, 2f)
     gate_h, up_h = jnp.split(gate_up, 2, axis=-1)
     h = jax.nn.silu(gate_h) * up_h
-    ex_out = jnp.einsum("gecf,efd->gecd", h, p["wo"])
-    ex_out = ctx.c(ex_out, ("batch", "experts", None, "embed"))
+    ex_out = grouped_gemm(h, group_offsets, p["wo"], cfg)  # (rows, d)
+    ex_out = ctx.c(ex_out, ("expert_rows", "embed"))
 
-    combine = jnp.einsum(
-        "gske,gskc->gsec", onehot_keep * gate.astype(xg.dtype)[..., None], cap_oh
-    )
-    y = jnp.einsum("gsec,gecd->gsd", combine, ex_out).reshape(b, t, d)
+    # Combine: gather each pair's expert output back and weight by its gate
+    # (dropped pairs carry gate 0, so the clipped gather never contributes).
+    contrib = ex_out[jnp.clip(dest, 0, rows - 1)] * gate.astype(x.dtype)[:, None]
+    y = jnp.sum(
+        contrib.astype(jnp.float32).reshape(n, k, d), axis=1
+    ).astype(x.dtype).reshape(b, t, d)
 
     if cfg.num_shared_experts:
-        xf = x.reshape(n, d)
+        # shared_gate rides the plan/execute API like every other projection
+        # (f32 operands preserve the fp32-router numerics of the gate).
         sg = jax.nn.sigmoid(
-            jnp.einsum("nd,do->no", xf.astype(jnp.float32), p["shared_gate"].astype(jnp.float32))
+            gemm(xf.astype(jnp.float32), p["shared_gate"].astype(jnp.float32), cfg)
         ).astype(x.dtype)
         gu = gemm(xf, p["shared_wi"], cfg)
         g_, u_ = jnp.split(gu, 2, axis=-1)
         shared = gemm(jax.nn.silu(g_) * u_, p["shared_wo"], cfg)
         y = y + (shared * sg).reshape(b, t, d)
 
-    # Switch load-balance + router z-loss (means over all groups/tokens).
-    load = jnp.mean(onehot.sum(2), axis=(0, 1))  # fraction routed per expert
-    imp = jnp.mean(probs, axis=(0, 1))
+    # Switch load-balance + router z-loss (means over all tokens).  The
+    # routing `counts` from dispatch ARE the one-hot load sums (top-k indices
+    # carry no gradient either way), so no (n, k, e) tensor materializes.
+    load = counts.astype(jnp.float32) / n  # fraction routed per expert
+    imp = jnp.mean(probs, axis=0)
     lb_loss = e * jnp.sum(load * imp) / k
     router_z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
     aux = {"lb_loss": lb_loss, "router_z": router_z}

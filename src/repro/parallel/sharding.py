@@ -17,6 +17,7 @@ Default logical->physical rules:
     kv_heads -> 'model'             GQA KV heads (capped by kv count)
     mlp      -> 'model'             Megatron TP: FFN hidden
     experts  -> 'model'             EP: MoE expert dim
+    expert_rows -> 'model'          EP: grouped-GEMM dispatch-buffer rows
     vocab    -> 'model'             vocab-sharded embedding + logits
     state    -> None                SSM recurrent state (small)
     kv_seq   -> None                KV-cache length ('data' under SP rules)
@@ -57,6 +58,11 @@ _DEFAULT: dict = {
     "head_dim": None,
     "mlp": "model",
     "experts": "model",
+    # EP: the grouped-GEMM capacity buffer's row dim is expert-major
+    # (models/moe.py), so sharding it over 'model' co-locates each expert's
+    # token rows with its weight slab — pjit's resharding of the dispatch
+    # buffer into this layout IS the EP all-to-all (DESIGN.md §10).
+    "expert_rows": "model",
     "vocab": "model",
     "state": None,
     "kv_seq": None,
