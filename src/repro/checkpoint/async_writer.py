@@ -2,9 +2,15 @@
 
 The train loop calls `submit(step, tree)`: leaves are fetched to host
 (device_get — cheap relative to serialization) and the npz write + rename
-happens on a background thread, so the TPUs keep stepping.  `wait()` drains
-the queue (called before exit and before any restore).  Errors surface on the
-next submit/wait — a failed write never silently drops a checkpoint.
+happens on a background thread, so the TPUs keep stepping.  Errors surface on
+the next submit/wait and again in `close()`/`__exit__` — a failed write never
+silently drops a checkpoint.
+
+Transient write failures (full disk flushed by a janitor, NFS blips) are
+absorbed by bounded retry with exponential backoff (`resilience.policy
+.retry_call`, site="checkpoint.write"); each retry is recorded in the
+resilience ledger so "succeeded on attempt 2" is visible after the fact
+(DESIGN.md §11).
 """
 
 from __future__ import annotations
@@ -16,17 +22,50 @@ from typing import Any, Optional
 import jax
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.resilience import faults as _faults
+from repro.resilience.policy import retry_call as _retry_call
 
 __all__ = ["AsyncCheckpointer"]
 
 
 class AsyncCheckpointer:
-    def __init__(self, manager: CheckpointManager):
+    """Background checkpoint writer; usable as a context manager.
+
+    `retries`/`backoff` bound the per-checkpoint write retries (exponential
+    backoff, capped at `max_backoff` seconds).  `retries=0` disables retry.
+    """
+
+    def __init__(
+        self,
+        manager: CheckpointManager,
+        *,
+        retries: int = 2,
+        backoff: float = 0.05,
+        max_backoff: float = 1.0,
+    ):
         self.manager = manager
+        self.retries = retries
+        self.backoff = backoff
+        self.max_backoff = max_backoff
         self._q: "queue.Queue" = queue.Queue()
         self._err: Optional[BaseException] = None
+        self._closed = False
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
+
+    def _save_with_retry(self, step: int, host_tree: Any, meta) -> None:
+        def _save_once() -> None:
+            _faults.check("checkpoint.write", step=step)
+            self.manager.save(step, host_tree, meta)
+
+        _retry_call(
+            _save_once,
+            retries=self.retries,
+            base_delay=self.backoff,
+            max_delay=self.max_backoff,
+            retry_on=(OSError, _faults.FaultError),
+            site="checkpoint.write",
+        )
 
     def _worker(self) -> None:
         while True:
@@ -35,8 +74,8 @@ class AsyncCheckpointer:
                 return
             step, host_tree, meta = item
             try:
-                self.manager.save(step, host_tree, meta)
-            except BaseException as e:  # surfaced on next submit/wait
+                self._save_with_retry(step, host_tree, meta)
+            except BaseException as e:  # surfaced on next submit/wait/close
                 self._err = e
             finally:
                 self._q.task_done()
@@ -47,6 +86,8 @@ class AsyncCheckpointer:
             raise RuntimeError("async checkpoint write failed") from err
 
     def submit(self, step: int, tree: Any, meta: Optional[dict] = None) -> None:
+        if self._closed:
+            raise RuntimeError("submit() on a closed AsyncCheckpointer")
         self._raise_pending()
         # Snapshot NOW: device_get on an already-host numpy leaf is a no-op
         # *reference*, so force a copy — otherwise the caller mutating the
@@ -63,6 +104,31 @@ class AsyncCheckpointer:
         self._raise_pending()
 
     def close(self) -> None:
-        self.wait()
+        """Drain the queue, stop the worker, then surface any pending error.
+
+        The thread is always stopped, even when the last write failed — the
+        error raises AFTER shutdown so callers are never left with a live
+        worker they cannot rejoin.
+        """
+        if self._closed:
+            self._raise_pending()
+            return
+        self._closed = True
+        self._q.join()
         self._q.put(None)
         self._thread.join()
+        self._raise_pending()
+
+    def __enter__(self) -> "AsyncCheckpointer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.close()
+            return
+        # An exception is already propagating: still shut down cleanly, but
+        # don't let a pending-write error mask the original exception.
+        try:
+            self.close()
+        except RuntimeError:
+            pass

@@ -39,6 +39,19 @@ the `grouped` capability with a dedicated impl (the Pallas ragged mesh
 kernel in `kernels/grouped.py`; segment-masked einsum on xla/ref), and an
 `expert` collective schedule shards the group dim over a device mesh (EP).
 
+The planner degrades instead of dying (DESIGN.md §11).  `plan()` resolves a
+capability-ordered **fallback chain** (`FALLBACK_ORDER`: pallas_mesh → xla →
+ref) behind the chosen backend: a failed plan build or a failed execution
+falls to the next capable backend instead of raising, recording a
+`DegradationEvent` in the plan's own `health` record (`describe()["health"]`)
+and in the process-wide `resilience.ledger`.  Sharded plans degrade along the
+schedule axis instead — a collective failure falls back to replicated
+(unsharded) execution of the same spec.  Spec-level validation errors
+(`PlanValidationError`) never trigger fallback: a spec every backend must
+reject is a caller bug, not a backend failure.  The opt-in `guard_nonfinite`
+plan option samples outputs for NaN/Inf post-epilogue (fused paths stay
+fused) with a `raise | fallback | zero_and_record` policy.
+
 `repro.kernels.ops.matmul` remains as a thin compat shim over this module.
 """
 
@@ -58,6 +71,14 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.kernels import autotune as _autotune
 from repro.kernels import ref
 from repro.kernels.grouped import grouped_mesh_matmul_pallas
+from repro.resilience import faults as _faults
+from repro.resilience import ledger as _rledger
+from repro.resilience.policy import (
+    NonFiniteError,
+    nonfinite_count,
+    normalize_policy,
+    scrub_nonfinite,
+)
 from repro.kernels.mesh_matmul import (
     ACTIVATIONS,
     mesh_matmul_pallas,
@@ -66,11 +87,13 @@ from repro.kernels.mesh_matmul import (
 )
 
 __all__ = [
+    "FALLBACK_ORDER",
     "SCHEDULES",
     "STRUCTURES",
     "BackendCapabilities",
     "CapabilityError",
     "Epilogue",
+    "PlanValidationError",
     "GemmSpec",
     "GroupSpec",
     "GroupedPlan",
@@ -530,6 +553,13 @@ class CapabilityError(ValueError):
     """A spec asks for something the (chosen or only) backend cannot do."""
 
 
+class PlanValidationError(ValueError):
+    """The SPEC itself is malformed (misaligned scramble blocks, non-square
+    symmetric product, inconsistent ShardSpec, ...).  Subclasses ValueError
+    for caller compatibility, but is excluded from the fallback chain: every
+    backend must reject the same spec, so degrading would only mask the bug."""
+
+
 @dataclasses.dataclass(frozen=True)
 class BackendCapabilities:
     """What a registered backend declares it can execute.
@@ -755,6 +785,27 @@ def _choose_backend(spec: GemmSpec) -> _Backend:
     raise CapabilityError(
         "no registered backend can execute this spec: " + "; ".join(reasons)
     )
+
+
+# Capability-ordered degradation ladder (DESIGN.md §11): when a backend's
+# plan build or execution fails, the plan falls to the next CAPABLE backend
+# in this order (then any other registered backend, registration order).
+# ref sits last: slowest, but the oracle that can always run.
+FALLBACK_ORDER = ("pallas_mesh", "xla", "ref")
+
+
+def _fallback_chain(spec: GemmSpec, primary: _Backend) -> List[_Backend]:
+    """`primary` plus every other backend capable of `spec`, fallback-ordered."""
+    chain = [primary]
+    names = {primary.name}
+    for name in (*FALLBACK_ORDER, *_REGISTRY):
+        be = _REGISTRY.get(name)
+        if be is None or be.name in names:
+            continue
+        if _check_capabilities(spec, be) is None:
+            chain.append(be)
+            names.add(be.name)
+    return chain
 
 
 # ---------------------------------------------------------------------------
@@ -1031,11 +1082,26 @@ class Plan:
     vmem_bytes: Optional[int]
     sigma_table: Optional[np.ndarray] = None
     stagger_table: Optional[np.ndarray] = None
+    # -- resilience state (DESIGN.md §11) --
+    # guard: opt-in non-finite output policy; health: DegradationEvents this
+    # plan recorded (build-time fallbacks + execution-time degradations);
+    # _chain: backend names still available below the active one.
+    guard: Optional[str] = None
+    guard_sample: Optional[int] = None
+    health: List = dataclasses.field(default_factory=list)
+    _chain: List[str] = dataclasses.field(default_factory=list, repr=False)
+    _active: Optional[str] = dataclasses.field(default=None, repr=False)
     _fn: Optional[Callable] = dataclasses.field(default=None, repr=False)
 
     @property
     def activation(self) -> Optional[str]:
         return self.spec.epilogue.activation
+
+    @property
+    def active_backend(self) -> str:
+        """The backend actually executing: `backend` until an execution-time
+        degradation swapped in a fallback."""
+        return self._active or self.backend
 
     @property
     def executor(self) -> Callable:
@@ -1066,6 +1132,13 @@ class Plan:
             "interpret": self.interpret,
             "flops": self.flops,
             "vmem_bytes": self.vmem_bytes,
+            "health": {
+                "active_backend": self.active_backend,
+                "degraded": bool(self.health),
+                "guard_nonfinite": self.guard,
+                "fallback_chain": list(self._chain),
+                "events": [e.as_dict() for e in self.health],
+            },
         }
         grp = self.spec.group
         if grp is not None:
@@ -1119,7 +1192,104 @@ class Plan:
 
     def __call__(self, a, b, bias=None, residual=None) -> jax.Array:
         self._check_operands(a, b, bias, residual)
-        return self._fn(a, b, bias, residual)
+        return self._execute((a, b, bias, residual))
+
+    # -- resilience (DESIGN.md §11) ------------------------------------------
+
+    def _record(self, site: str, cause: str, fallback: str, **detail):
+        """One DegradationEvent, in the plan's health AND the global ledger."""
+        ev = _rledger.record(site, cause=cause, fallback=fallback, **detail)
+        self.health.append(ev)
+        return ev
+
+    def _degrade(self, args: tuple, *, site: str, cause: str, original=None):
+        """Fall to the next capable backend in the chain and run `args` there.
+
+        On success the plan PERMANENTLY swaps its executor — a backend that
+        failed (or produced NaN under the `fallback` guard policy) is not
+        trusted again for this plan; the hot path recovers to a single
+        `_fn` call.  Exhausting the chain re-raises."""
+        err = original
+        while self._chain:
+            name = self._chain.pop(0)
+            self._record(site, cause, fallback=name, backend=self.active_backend)
+            try:
+                fb = plan(self.spec, backend=name, fallback=False)
+                _faults.check(site, backend=name)
+                out = fb._fn(*args)
+            except PlanValidationError:
+                raise
+            except Exception as e:
+                cause = f"{type(e).__name__}: {e}"
+                err = e
+                continue
+            self._fn = fb._fn
+            self._active = name
+            return out
+        raise RuntimeError(
+            f"backend {self.active_backend!r} failed ({cause}) and the"
+            f" fallback chain is exhausted for this spec"
+        ) from err
+
+    def _execute(self, args: tuple) -> jax.Array:
+        try:
+            _faults.check("plan.execute", backend=self.active_backend)
+            out = self._fn(*args)
+        except (PlanValidationError, CapabilityError):
+            raise
+        except Exception as e:
+            out = self._degrade(
+                args,
+                site="plan.execute",
+                cause=f"{type(e).__name__}: {e}",
+                original=e,
+            )
+        out = _faults.poison("kernel.output", out, backend=self.active_backend)
+        if self.guard is not None:
+            out = self._apply_guard(out, args)
+        return out
+
+    def _apply_guard(self, out: jax.Array, args: tuple) -> jax.Array:
+        """The post-epilogue non-finite guard (fused paths stay fused: the
+        check wraps the executor's OUTPUT, never reaches into the kernel)."""
+        if isinstance(out, jax.core.Tracer):
+            # Under an enclosing trace values are unknown: zero_and_record
+            # lowers to an unconditional traced scrub; raise/fallback cannot
+            # branch on traced values, so the gap is recorded, not hidden.
+            if self.guard == "zero_and_record":
+                return scrub_nonfinite(out)
+            self._record(
+                "guard.nonfinite",
+                cause="guard bypassed under trace (values unknown)",
+                fallback="unchecked",
+                backend=self.active_backend,
+            )
+            return out
+        bad = nonfinite_count(out, sample=self.guard_sample)
+        if not bad:
+            return out
+        cause = f"{bad} non-finite output value(s) sampled"
+        if self.guard == "zero_and_record":
+            self._record(
+                "guard.nonfinite", cause, fallback="zero",
+                backend=self.active_backend,
+            )
+            return scrub_nonfinite(out)
+        if self.guard == "fallback":
+            out = self._degrade(args, site="guard.nonfinite", cause=cause)
+            if isinstance(out, jax.core.Tracer) or not nonfinite_count(
+                out, sample=self.guard_sample
+            ):
+                return out
+            raise NonFiniteError(
+                f"non-finite outputs persist after fallback"
+                f" (backend {self.active_backend!r})"
+            )
+        raise NonFiniteError(
+            f"guarded plan produced {bad} non-finite value(s) on backend"
+            f" {self.active_backend!r} (structure={self.spec.structure!r},"
+            f" mkn={self.spec.eff_m}x{self.spec.k}x{self.spec.n})"
+        )
 
 
 def _check_epilogue_shapes(bias, residual, spec: GemmSpec) -> None:
@@ -1194,7 +1364,7 @@ class GroupedPlan(Plan):
 
     def __call__(self, tokens, group_offsets, weights, bias=None, residual=None):
         _check_grouped_operands(self, tokens, group_offsets, weights, bias, residual)
-        return self._fn(tokens, group_offsets, weights, bias, residual)
+        return self._execute((tokens, group_offsets, weights, bias, residual))
 
 
 @dataclasses.dataclass
@@ -1250,6 +1420,31 @@ class ShardedPlan(Plan):
             "per_shard_vmem_bytes": self.local.vmem_bytes,
         }
         return d
+
+    def _degrade(self, args: tuple, *, site: str, cause: str, original=None):
+        """Sharded degradation ladder: a failed collective schedule falls back
+        to REPLICATED execution of the identical spec — the same global
+        operands run through the unsharded planner (its own backend chain
+        still applies), so numerics are preserved at the cost of the
+        collective's speedup."""
+        if self._active == "replicated":  # already degraded once
+            raise RuntimeError(
+                f"sharded plan failed again after degrading to replicated"
+                f" ({cause})"
+            ) from original
+        self._record(
+            site,
+            cause,
+            fallback="replicated",
+            schedule=self.schedule,
+            backend=self.active_backend,
+        )
+        unspec = dataclasses.replace(self.spec, shard=None)
+        fb = plan(unspec)
+        out = fb._execute(args)
+        self._fn = fb._fn
+        self._active = "replicated"
+        return out
 
 
 @dataclasses.dataclass
@@ -1441,22 +1636,40 @@ register_backend(
 
 
 def plan(
-    spec: GemmSpec, *, backend: Optional[str] = None, mesh: Optional[Mesh] = None
+    spec: GemmSpec,
+    *,
+    backend: Optional[str] = None,
+    mesh: Optional[Mesh] = None,
+    guard_nonfinite: Optional[str] = None,
+    guard_sample: Optional[int] = None,
+    fallback: bool = True,
 ) -> Plan:
     """Validate `spec` against backend capabilities and return the cached,
     reusable executable for it.
 
-    Resolution happens ONCE per (spec, backend, mesh) triple per platform:
-    capability checks, autotuned block shapes, σ/stagger tables, collective
-    schedule, and the jitted executor are all fixed here; repeated calls
-    return the *identical* Plan object.  An explicit `backend` is validated
-    strictly (CapabilityError on mismatch); otherwise the first capable
-    backend is chosen (pinned default → xla → pallas_mesh → registration
-    order).  A spec carrying a ShardSpec requires the live device `mesh` and
-    returns a ShardedPlan; equal meshes (same devices + axis names) key the
-    same cache entry, different meshes plan separately.  A spec carrying a
-    GroupSpec returns a GroupedPlan taking (tokens, group_offsets, weights)
-    — and, with a ShardSpec too, a ShardedGroupedPlan (`expert` schedule).
+    Resolution happens ONCE per (spec, backend, mesh, guard) tuple per
+    platform: capability checks, autotuned block shapes, σ/stagger tables,
+    collective schedule, and the jitted executor are all fixed here; repeated
+    calls return the *identical* Plan object.  An explicit `backend` is
+    validated strictly (CapabilityError on mismatch); otherwise the first
+    capable backend is chosen (pinned default → xla → pallas_mesh →
+    registration order).  A spec carrying a ShardSpec requires the live
+    device `mesh` and returns a ShardedPlan; equal meshes (same devices +
+    axis names) key the same cache entry, different meshes plan separately.
+    A spec carrying a GroupSpec returns a GroupedPlan taking (tokens,
+    group_offsets, weights) — and, with a ShardSpec too, a
+    ShardedGroupedPlan (`expert` schedule).
+
+    Resilience (DESIGN.md §11): with `fallback=True` (default) a failed plan
+    BUILD falls down the capability-ordered chain (`FALLBACK_ORDER`) to the
+    next backend able to run the spec, recording a DegradationEvent in the
+    returned plan's `health` and the global `resilience.ledger` instead of
+    raising; only when every capable backend fails does the last error
+    surface.  Spec-level `PlanValidationError`s always raise — they are
+    caller bugs every backend would reject.  `guard_nonfinite` opts the plan
+    into the post-epilogue NaN/Inf guard with policy `raise | fallback |
+    zero_and_record` (`guard_sample` spot-checks that many strided output
+    elements instead of reducing the full array).
     """
     if not isinstance(spec, GemmSpec):
         raise TypeError(f"plan() takes a GemmSpec, got {type(spec).__name__}")
@@ -1470,6 +1683,8 @@ def plan(
             "mesh= given but spec has no ShardSpec; attach one, e.g."
             " GemmSpec(..., shard=ShardSpec.from_mesh(mesh, ...))"
         )
+    if guard_nonfinite is not None:
+        guard_nonfinite = normalize_policy(guard_nonfinite)
     if backend is not None:
         be = _require_backend(backend)
         reason = _check_capabilities(spec, be)
@@ -1478,14 +1693,48 @@ def plan(
     else:
         be = _choose_backend(spec)
 
-    key = (spec, be.name, jax.default_backend(), mesh)
+    key = (
+        spec, be.name, jax.default_backend(), mesh, guard_nonfinite, guard_sample
+    )
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
         _PLAN_STATS["hits"] += 1
         return cached
     _PLAN_STATS["misses"] += 1
 
-    p = _build_plan(spec, be) if mesh is None else _build_sharded_plan(spec, be, mesh)
+    chain = _fallback_chain(spec, be) if fallback else [be]
+    build_events: List[Any] = []
+    p = None
+    built_at = 0
+    for i, cand in enumerate(chain):
+        try:
+            _faults.check("plan.build", backend=cand.name)
+            p = (
+                _build_plan(spec, cand)
+                if mesh is None
+                else _build_sharded_plan(spec, cand, mesh)
+            )
+            built_at = i
+            break
+        except (PlanValidationError, CapabilityError):
+            raise
+        except Exception as e:
+            if i + 1 >= len(chain):
+                raise
+            build_events.append(
+                _rledger.record(
+                    "plan.build",
+                    cause=f"{type(e).__name__}: {e}",
+                    fallback=chain[i + 1].name,
+                    backend=cand.name,
+                )
+            )
+    p.health.extend(build_events)
+    # Backends still available below the one that built — the execution-time
+    # degradation ladder (Plan._degrade).
+    p._chain = [c.name for c in chain[built_at + 1 :]]
+    p.guard = guard_nonfinite
+    p.guard_sample = guard_sample
     _PLAN_CACHE[key] = p
     return p
 
@@ -1577,7 +1826,7 @@ def _build_plan(spec: GemmSpec, be: _Backend) -> Plan:
 
     sigma = stagger_tbl = None
     if spec.structure == "symmetric" and spec.m != spec.n:
-        raise ValueError(
+        raise PlanValidationError(
             f"structure='symmetric' requires a square product, got "
             f"{spec.m}x{spec.n}"
         )
@@ -1585,12 +1834,12 @@ def _build_plan(spec: GemmSpec, be: _Backend) -> Plan:
         bm, bn, bk = blocks
         eff_m, n = spec.eff_m, spec.n
         if eff_m % bm or n % bn:
-            raise ValueError(
+            raise PlanValidationError(
                 "structure='scrambled' requires block-aligned M and N "
                 f"(got M={eff_m}, N={n} with blocks {bm}x{bn})"
             )
         if eff_m // bm != n // bn:
-            raise ValueError(
+            raise PlanValidationError(
                 f"scramble_out needs square block grid, got {eff_m // bm}x{n // bn}"
             )
         # σ lookup table, host-side numpy, once — the kernel's scalar-prefetch
@@ -1640,17 +1889,17 @@ def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
     if spec.group is not None:
         return _resolve_grouped_sharding(spec)
     if shard.axis_g is not None:
-        raise ValueError(
+        raise PlanValidationError(
             "axis_g partitions the group dim of a GROUPED spec; this spec"
             " carries no GroupSpec"
         )
     if spec.structure == "scrambled":
-        raise ValueError(
+        raise PlanValidationError(
             "structure='scrambled' does not compose with a ShardSpec: the"
             " σ arrangement is defined on the global block grid"
         )
     if spec.structure == "symmetric" and spec.m != spec.n:
-        raise ValueError(
+        raise PlanValidationError(
             f"structure='symmetric' requires a square product, got "
             f"{spec.m}x{spec.n}"
         )
@@ -1667,14 +1916,14 @@ def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
         else:
             sched = "replicated"
     if sched == "expert":
-        raise ValueError(
+        raise PlanValidationError(
             "schedule 'expert' shards the group dim of a GROUPED spec;"
             " this spec carries no GroupSpec"
         )
 
     def div(what: str, dim: int, axes, p: int) -> int:
         if dim % p:
-            raise ValueError(
+            raise PlanValidationError(
                 f"{what}={dim} is not divisible by mesh axes {axes!r}"
                 f" (size {p}) required by schedule {sched!r}"
                 f" on mesh {shard.mesh_axes}"
@@ -1682,14 +1931,14 @@ def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
         return dim // p
 
     if spec.batched_b and sched != "replicated":
-        raise ValueError(
+        raise PlanValidationError(
             f"schedule {sched!r} does not support fully-batched operands;"
             " use the replicated schedule (batch/M/N partitions are local)"
         )
     if shard.axis_batch is not None and not spec.batch:
-        raise ValueError("axis_batch given but the spec has no batch dims")
+        raise PlanValidationError("axis_batch given but the spec has no batch dims")
     if not spec.batched_b and pb > 1:
-        raise ValueError(
+        raise PlanValidationError(
             "axis_batch partitions the leading dim of a fully-batched"
             " product; with 2D b the batch folds into M — shard axis_m"
             " instead"
@@ -1698,7 +1947,7 @@ def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
     lb: Tuple[int, ...] = spec.batch
     if sched == "replicated":
         if pk > 1:
-            raise ValueError(
+            raise PlanValidationError(
                 "schedule 'replicated' cannot shard K (a K partition needs a"
                 " collective; use 'reduce_scatter_k' or 'ring_k')"
             )
@@ -1712,12 +1961,12 @@ def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
         bytes_moved, phases = 0, 0
     elif sched == "allgather_a":
         if not isinstance(shard.axis_m, str):
-            raise ValueError(
+            raise PlanValidationError(
                 "schedule 'allgather_a' needs a single mesh axis on M"
                 f" (axis_m={shard.axis_m!r}) — the gather is a 1D ring"
             )
         if pk > 1 or pn > 1:
-            raise ValueError(
+            raise PlanValidationError(
                 "schedule 'allgather_a' shards only M; drop axis_k/axis_n"
             )
         lm = div("M", eff_m, shard.axis_m, pm)
@@ -1726,15 +1975,15 @@ def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
         phases = pm - 1
     elif sched in ("reduce_scatter_k", "ring_k"):
         if shard.axis_k is None:
-            raise ValueError(f"schedule {sched!r} requires axis_k")
+            raise PlanValidationError(f"schedule {sched!r} requires axis_k")
         if pm > 1 or pn > 1:
             if shard.schedule == "auto":
-                raise ValueError(
+                raise PlanValidationError(
                     "no collective schedule combines a K partition with an"
                     " M/N partition; shard K alone (reduce_scatter_k /"
                     " ring_k) or drop axis_k"
                 )
-            raise ValueError(
+            raise PlanValidationError(
                 f"schedule {sched!r} shards only K; drop axis_m/axis_n"
             )
         lk = div("K", spec.k, shard.axis_k, pk)
@@ -1749,7 +1998,7 @@ def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
             bytes_moved = (pk - 1) * eff_m * spec.n * 4
         phases = pk - 1
     else:  # pragma: no cover — ShardSpec.__post_init__ rejects unknown names
-        raise ValueError(f"unknown schedule {sched!r}")
+        raise PlanValidationError(f"unknown schedule {sched!r}")
 
     local = dataclasses.replace(
         spec,
@@ -1776,7 +2025,7 @@ def _resolve_grouped_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
     grp = spec.group
     for field in ("axis_m", "axis_k", "axis_n", "axis_batch"):
         if getattr(shard, field) is not None and shard.axis_size(getattr(shard, field)) > 1:
-            raise ValueError(
+            raise PlanValidationError(
                 f"grouped specs shard only the group dim (axis_g);"
                 f" drop {field}"
             )
@@ -1785,16 +2034,16 @@ def _resolve_grouped_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
     if sched == "auto":
         sched = "expert" if pg > 1 else "replicated"
     if sched not in ("expert", "replicated"):
-        raise ValueError(
+        raise PlanValidationError(
             f"schedule {sched!r} does not apply to grouped specs; use"
             " 'expert' (group dim over axis_g) or 'replicated'"
         )
     if sched == "replicated" and pg > 1:
-        raise ValueError(
+        raise PlanValidationError(
             "schedule 'replicated' cannot shard the group dim; use 'expert'"
         )
     if grp.num_groups % pg:
-        raise ValueError(
+        raise PlanValidationError(
             f"num_groups={grp.num_groups} is not divisible by mesh axis"
             f" {shard.axis_g!r} (size {pg}) required by schedule 'expert'"
             f" on mesh {shard.mesh_axes}"
@@ -1963,7 +2212,7 @@ def _build_sharded_plan(spec: GemmSpec, be: _Backend, mesh: Mesh) -> ShardedPlan
     shard = spec.shard
     live = tuple((str(n), int(s)) for n, s in mesh.shape.items())
     if live != shard.mesh_axes:
-        raise ValueError(
+        raise PlanValidationError(
             f"ShardSpec was built for mesh axes {shard.mesh_axes} but"
             f" plan() got a mesh with {live}; rebuild it with"
             f" ShardSpec.from_mesh(mesh, ...)"

@@ -29,12 +29,17 @@ import json
 import os
 import tempfile
 import time
+import warnings
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.resilience import faults as _faults
+from repro.resilience import ledger as _rledger
+from repro.resilience.policy import retry_call as _retry_call
 
 __all__ = [
     "CACHE_VERSION",
@@ -159,60 +164,154 @@ class AutotuneCache:
     `.autotune_cache.json` this formalizes) is migrated in memory on load and
     rewritten as v2 on the next save.  Any other/unknown version is discarded
     rather than trusted.
+
+    Resilience (DESIGN.md §11): an unreadable/corrupt cache file is
+    QUARANTINED — warned about once (with the path), moved aside to
+    `<path>.corrupt`, and recorded in the resilience ledger — never crashed
+    on and never silently retuned-forever.  Individual entries are validated
+    against the VMEM model on load: an entry whose working set cannot fit the
+    budget (a corrupt or hand-edited cache) is dropped with a ledger record,
+    and the next `autotune` miss rebuilds it.
     """
 
-    def __init__(self, path: Optional[os.PathLike] = None):
+    def __init__(
+        self,
+        path: Optional[os.PathLike] = None,
+        *,
+        vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    ):
         self.path = Path(
             path or os.environ.get(_ENV_CACHE, DEFAULT_CACHE_FILENAME)
         )
+        self.vmem_budget = vmem_budget
         self._entries: Optional[Dict[str, dict]] = None
 
     # -- persistence ---------------------------------------------------------
+
+    def _entry_fits_vmem(self, key: str, blocks) -> bool:
+        """VMEM-model validation: the (worst-case epilogue) working set of a
+        cached triple must fit the budget candidates were pruned by.  Keys
+        whose dtype field doesn't parse are conservatively kept."""
+        try:
+            dtype = jnp.dtype(key.split("|")[1])
+        except (IndexError, TypeError):
+            return True
+        bm, bn, bk = (int(x) for x in blocks)
+        return (
+            vmem_bytes(bm, bn, bk, dtype, has_bias=True, has_residual=True)
+            <= self.vmem_budget
+        )
+
+    def _quarantine_file(self, err: BaseException) -> None:
+        """Move the unreadable cache aside as `<path>.corrupt` so the bad
+        file is diagnosable (and never re-read), then record + warn once."""
+        corrupt = Path(str(self.path) + ".corrupt")
+        moved = False
+        try:
+            os.replace(self.path, corrupt)
+            moved = True
+        except OSError:
+            pass
+        _warn_once(
+            f"autotune cache {self.path} is unreadable"
+            f" ({type(err).__name__}: {err});"
+            + (f" moved aside to {corrupt};" if moved else "")
+            + " retuning from scratch"
+        )
+        _rledger.record(
+            "autotune.cache_load",
+            cause=f"{type(err).__name__}: {err}",
+            fallback="quarantine",
+            path=str(self.path),
+            moved_to=str(corrupt) if moved else None,
+        )
 
     def _load(self) -> Dict[str, dict]:
         if self._entries is not None:
             return self._entries
         self._entries = {}
         try:
+            _faults.check("autotune.cache_load", path=str(self.path))
             raw = json.loads(self.path.read_text())
-        except (OSError, json.JSONDecodeError):
+        except FileNotFoundError:
+            return self._entries  # first run: nothing to load, nothing to warn
+        except (OSError, json.JSONDecodeError, _faults.FaultError) as e:
+            self._quarantine_file(e)
             return self._entries
+        dropped = []
         if isinstance(raw, dict) and "version" not in raw:
             # v1 legacy: flat {key: [bm, bn, bk]}
             for key, blocks in raw.items():
-                if _valid_blocks(blocks):
+                if _valid_blocks(blocks) and self._entry_fits_vmem(key, blocks):
                     self._entries[key] = {
                         "blocks": [int(x) for x in blocks],
                         "source": "seed",
                         "ms": None,
                     }
+                else:
+                    dropped.append(key)
         elif isinstance(raw, dict) and raw.get("version") == CACHE_VERSION:
             for key, ent in raw.get("entries", {}).items():
-                if isinstance(ent, dict) and _valid_blocks(ent.get("blocks")):
+                if (
+                    isinstance(ent, dict)
+                    and _valid_blocks(ent.get("blocks"))
+                    and self._entry_fits_vmem(key, ent["blocks"])
+                ):
                     self._entries[key] = ent
+                else:
+                    dropped.append(key)
         # unknown version: start clean (stale caches must not steer the search)
+        if dropped:
+            _warn_once(
+                f"autotune cache {self.path}: quarantined {len(dropped)}"
+                f" invalid entr{'y' if len(dropped) == 1 else 'ies'}"
+                f" (failed block/VMEM-model validation); they will be retuned"
+            )
+            _rledger.record(
+                "autotune.cache_load",
+                cause=f"{len(dropped)} entries failed validation",
+                fallback="retune",
+                path=str(self.path),
+                keys=dropped[:8],
+            )
         return self._entries
 
     def save(self) -> None:
-        """Best-effort persistence: an unwritable filesystem must never turn
-        into a matmul-time crash, so every OS step stays inside the guard."""
+        """Best-effort persistence with bounded retry: an unwritable
+        filesystem must never turn into a matmul-time crash, so after the
+        retries the final OSError is still swallowed (each retry is a ledger
+        event, so persistent write failure stays visible)."""
         entries = self._load()
         payload = {"version": CACHE_VERSION, "entries": entries}
-        tmp = None
+
+        def _write_once() -> None:
+            tmp = None
+            try:
+                self.path.parent.mkdir(parents=True, exist_ok=True)
+                fd, tmp = tempfile.mkstemp(
+                    dir=str(self.path.parent), prefix=self.path.name, suffix=".tmp"
+                )
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except OSError:
+                if tmp is not None:
+                    try:
+                        os.unlink(tmp)
+                    except OSError:
+                        pass
+                raise
+
         try:
-            self.path.parent.mkdir(parents=True, exist_ok=True)
-            fd, tmp = tempfile.mkstemp(
-                dir=str(self.path.parent), prefix=self.path.name, suffix=".tmp"
+            _retry_call(
+                _write_once,
+                retries=2,
+                base_delay=0.01,
+                retry_on=(OSError,),
+                site="autotune.cache_save",
             )
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=1, sort_keys=True)
-            os.replace(tmp, self.path)
         except OSError:
-            if tmp is not None:
-                try:
-                    os.unlink(tmp)
-                except OSError:
-                    pass
+            pass
 
     # -- access --------------------------------------------------------------
 
@@ -231,6 +330,17 @@ class AutotuneCache:
 
     def keys(self) -> List[str]:
         return list(self._load())
+
+
+_WARNED: set = set()
+
+
+def _warn_once(msg: str) -> None:
+    """One warning per distinct message per process — a corrupt cache is
+    diagnosable without flooding every subsequent load."""
+    if msg not in _WARNED:
+        _WARNED.add(msg)
+        warnings.warn(msg, stacklevel=3)
 
 
 def _valid_blocks(blocks) -> bool:
@@ -384,10 +494,33 @@ def autotune(
             cands.insert(0, warm)
         measure = measure or _default_measure
         timed: List[Tuple[float, Blocks]] = []
+        failed = 0
         for blk in cands[:max_timed]:
-            timed.append((measure(m, k, n, dtype, backend, blk), blk))
-        ms, best = min(timed, key=lambda t: t[0])
-        source = "timed"
+            # A candidate that fails to compile/run is skipped, not fatal —
+            # the search degrades toward the analytic model instead of
+            # crashing plan construction.
+            try:
+                timed.append((measure(m, k, n, dtype, backend, blk), blk))
+            except Exception as e:
+                failed += 1
+                _rledger.record(
+                    "autotune.measure",
+                    cause=f"{type(e).__name__}: {e}",
+                    fallback="skip-candidate",
+                    blocks=blk,
+                )
+        if timed:
+            ms, best = min(timed, key=lambda t: t[0])
+            source = "timed"
+        else:
+            # every timed candidate failed: fall back to the model argmax
+            best, ms, source = cands[0], None, "model"
+            _rledger.record(
+                "autotune.measure",
+                cause=f"all {failed} timed candidates failed",
+                fallback="model",
+                key=key,
+            )
 
     cache.put(key, best, source=source, ms=ms)
     cache.save()

@@ -16,6 +16,13 @@ plan cache serves every subsequent request — `--plan-stats` prints the
 cache (one entry per (spec, backend, mesh) triple, however many requests
 ran), including per-plan communication cost for sharded plans.  `--mesh
 DxM` serves under a local device mesh (sharding constraints active).
+
+Robustness (DESIGN.md §11): `--requests N` serves N independent prompt
+batches through `serve_requests`, which isolates each request — one request
+raising (poisoned input, injected fault at the `serve.request` site) is
+reported, recorded in the resilience ledger, and *skipped*; the remaining
+requests still serve.  Any degradation events accumulated during the run
+(backend fallbacks, guard trips, retries) are printed at exit.
 """
 
 from __future__ import annotations
@@ -30,9 +37,11 @@ import numpy as np
 from repro.configs import get_config
 from repro.kernels import api as kernel_api
 from repro.models import ShardCtx, get_model
+from repro.resilience import faults as _faults
+from repro.resilience import ledger as _rledger
 from repro.train.train_step import make_prefill_step, make_serve_step
 
-__all__ = ["generate", "main", "report_plan_cache"]
+__all__ = ["generate", "main", "report_plan_cache", "serve_requests"]
 
 
 def report_plan_cache(prefix: str = "[serve]") -> dict:
@@ -133,6 +142,44 @@ def generate(
     return jnp.stack(toks, axis=1), steps_per_s
 
 
+def serve_requests(
+    model,
+    params,
+    request_prompts,
+    *,
+    gen_len: int,
+    ctx: ShardCtx = ShardCtx(),
+    prefix: str = "[serve]",
+):
+    """Serve a sequence of independent prompt batches, isolating failures.
+
+    Each element of `request_prompts` is a (B, T) int32 prompt batch served
+    via `generate`.  A request that raises is reported (one line, with the
+    error), recorded in the resilience ledger under the `serve.request`
+    site, and skipped — it never takes the other requests down.  Returns a
+    list parallel to `request_prompts`: (tokens, steps_per_s) for served
+    requests, None for skipped ones.
+    """
+    results = []
+    for i, prompts in enumerate(request_prompts):
+        try:
+            _faults.check("serve.request", request=i)
+            results.append(generate(model, params, prompts, gen_len=gen_len, ctx=ctx))
+        except Exception as e:
+            _rledger.record(
+                "serve.request",
+                cause=f"{type(e).__name__}: {e}",
+                fallback="skip",
+                request=i,
+            )
+            print(f"{prefix} request {i} FAILED ({type(e).__name__}: {e}) — skipped")
+            results.append(None)
+    served = sum(r is not None for r in results)
+    if served < len(results):
+        print(f"{prefix} served {served}/{len(results)} requests")
+    return results
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -141,6 +188,13 @@ def main(argv=None) -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--requests",
+        type=int,
+        default=1,
+        help="serve N independent prompt batches; a failing request is "
+        "reported and skipped, not fatal",
+    )
     ap.add_argument(
         "--plan-stats",
         action="store_true",
@@ -171,16 +225,31 @@ def main(argv=None) -> None:
         raise SystemExit("audio (whisper) serving is exercised in tests with a frames batch")
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(args.seed + 1), (args.batch, args.prompt_len), 0, cfg.vocab_size
-    ).astype(jnp.int32)
+    request_prompts = [
+        jax.random.randint(
+            jax.random.PRNGKey(args.seed + 1 + r),
+            (args.batch, args.prompt_len),
+            0,
+            cfg.vocab_size,
+        ).astype(jnp.int32)
+        for r in range(max(args.requests, 1))
+    ]
 
-    out, rate = generate(model, params, prompts, gen_len=args.gen, ctx=ctx)
+    _faults.install_env_plan()
+    results = serve_requests(model, params, request_prompts, gen_len=args.gen, ctx=ctx)
     print(f"[serve] {args.arch} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
-    print(f"[serve] decode steps/s: {rate:.2f}  ({rate * args.batch:.1f} tok/s batched)")
-    print(f"[serve] sample row 0: {np.asarray(out[0])[:16]}")
+    for r, res in enumerate(results):
+        if res is None:
+            continue
+        out, rate = res
+        print(
+            f"[serve] req {r}: decode steps/s {rate:.2f} "
+            f"({rate * args.batch:.1f} tok/s batched), row 0: {np.asarray(out[0])[:16]}"
+        )
     if args.plan_stats:
         report_plan_cache()
+    if _rledger.count():
+        print(_rledger.format_summary("[serve]"))
 
 
 if __name__ == "__main__":

@@ -58,6 +58,9 @@ def ring_allgather_matmul(
     full product, built ring-step by ring-step while chunks circulate.
     `matmul` computes each (m_blk, k) @ (k, n) step (default: XLA f32 dot).
     """
+    from repro.resilience import faults
+
+    faults.check("collective.step", schedule="allgather_a", axis=axis)
     mm = matmul or _default_mm
     p = _axis_size(axis)
     idx = jax.lax.axis_index(axis)
@@ -85,6 +88,9 @@ def matmul_ring_reducescatter(
     partial matmul.  `matmul` computes each (m/p, k_blk) @ (k_blk, n) step
     (default: XLA f32 dot).
     """
+    from repro.resilience import faults
+
+    faults.check("collective.step", schedule="reduce_scatter_k", axis=axis)
     mm = matmul or _default_mm
     p = _axis_size(axis)
     idx = jax.lax.axis_index(axis)

@@ -130,7 +130,9 @@ def ring_systolic_kpass(
     (m, k/p) @ (k/p, n) product (default: XLA f32 dot).
     """
     from repro.parallel.collectives import _axis_size, _default_mm, _shift
+    from repro.resilience import faults
 
+    faults.check("collective.step", schedule="ring_k", axis=axis)
     mm = matmul or _default_mm
     p = _axis_size(axis)
     part = mm(a_blk, b_blk)

@@ -1,0 +1,36 @@
+"""Resilience: fault injection, degradation ledger, numeric guard policies.
+
+The planner (DESIGN.md §11) promises graceful degradation — a failed Pallas
+plan build falls down the backend chain, a corrupt autotune cache is
+quarantined, an injected collective fault degrades a sharded plan to the
+replicated schedule, a NaN-producing kernel is caught by an opt-in guard.
+This package makes every one of those promises *testable*:
+
+  faults   deterministic fault-injection harness: arm failures at named
+           sites (`plan.build`, `autotune.cache_load`, `collective.step`,
+           `kernel.output`, `checkpoint.write`, ...) via a context-manager
+           fault plan keyed by site and trigger count
+  ledger   process-wide, timestamp-free record of every DegradationEvent
+           (site, cause, fallback, monotonic seq) — printed by
+           `serve --plan-stats` and inspectable in tests
+  policy   numeric guardrail policies (`raise | fallback | zero_and_record`)
+           and the bounded retry/backoff helper used on the I/O edges
+"""
+
+from repro.resilience import faults, ledger, policy
+from repro.resilience.faults import FaultError, FaultSpec, inject
+from repro.resilience.ledger import DegradationEvent
+from repro.resilience.policy import GUARD_POLICIES, NonFiniteError, retry_call
+
+__all__ = [
+    "DegradationEvent",
+    "FaultError",
+    "FaultSpec",
+    "GUARD_POLICIES",
+    "NonFiniteError",
+    "faults",
+    "inject",
+    "ledger",
+    "policy",
+    "retry_call",
+]
