@@ -1,0 +1,129 @@
+"""Continuous-batching serving under load: throughput + tail latency.
+
+Drives `launch/scheduler.ContinuousBatchingServer` with a deterministic
+Poisson arrival trace that OVERSUBSCRIBES the server (more concurrent work
+than slots + pages can hold), so the numbers exercise the whole ladder:
+admission queueing, page growth, preemption, and shedding — not just the
+steady-state decode loop.  Two runs over the same trace:
+
+  healthy   no faults armed — the baseline throughput / latency row
+  chaos     the `ci-default` fault plan armed (serve.admit, serve.step,
+            kv.page_alloc + the PR-6 sites) — the run must complete with
+            the injected faults absorbed as sheds/skips/stalls, and the
+            row quantifies what one fault per site costs
+
+Latency is per-request wall time from submit to retirement (p50/p99 over
+served requests); throughput is decode tokens per second of drive time.
+`run(as_dict=True)` returns the JSON payload merged into
+BENCH_kernels.json["serve"] by `benchmarks/run.py --json`.
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.scheduler import ContinuousBatchingServer, Request, ServeConfig
+from repro.models import get_model
+from repro.resilience import faults, ledger
+
+ARCH = "mesh-paper"
+N_REQUESTS = 24
+PROMPT_LEN = 8
+MAX_NEW = 12
+ARRIVAL_RATE = 1.5  # mean requests per tick (Poisson) — oversubscribes 4 slots
+
+
+def _poisson_trace(rng):
+    """Deterministic oversubscribed trace: Poisson arrivals, mixed sizes."""
+    arrivals = np.cumsum(rng.poisson(1.0 / ARRIVAL_RATE, size=N_REQUESTS))
+    reqs = []
+    for i in range(N_REQUESTS):
+        prompt = rng.integers(0, 256, size=PROMPT_LEN).astype(np.int32)
+        reqs.append(
+            Request(
+                rid=f"r{i:02d}",
+                prompt=prompt,
+                max_new_tokens=int(MAX_NEW - (i % 3)),  # mixed lengths
+                priority=int(i % 2),
+                arrival=int(arrivals[i]),
+            )
+        )
+    return reqs
+
+
+def _drive(model, params, requests):
+    scfg = ServeConfig(
+        max_slots=4,
+        page_size=8,
+        num_pages=13,  # 12 usable: 3 pages/seq -> 4 full seqs, growth contended
+        max_pages_per_seq=3,
+        queue_capacity=8,  # < N_REQUESTS: overflow sheds
+        default_deadline=256,
+        warmup_prompt_lens=(PROMPT_LEN,),
+    )
+    server = ContinuousBatchingServer(model, params, scfg)
+    server.warmup()
+    t0 = time.perf_counter()
+    results = server.run(requests)
+    wall = time.perf_counter() - t0
+    lat = sorted(r.latency_s for r in results.values() if r.status == "ok")
+    row = {
+        "wall_s": round(wall, 3),
+        "ticks": server.counters["ticks"],
+        "decode_tokens": server.counters["decode_tokens"],
+        "tok_per_s": round(server.counters["decode_tokens"] / wall, 1),
+        "served": server.counters["served"],
+        "shed": server.counters["shed"],
+        "timeout": server.counters["timeout"],
+        "preempted": server.counters["preempted"],
+        "skipped_ticks": server.counters["skipped_ticks"],
+        "p50_latency_ms": round(1e3 * lat[len(lat) // 2], 1) if lat else None,
+        "p99_latency_ms": round(
+            1e3 * lat[min(len(lat) - 1, int(len(lat) * 0.99))], 1
+        ) if lat else None,
+    }
+    return row
+
+
+def run(as_dict=False):
+    cfg = get_config(ARCH).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    requests = _poisson_trace(np.random.default_rng(7))
+
+    rows = {"healthy": _drive(model, params, requests)}
+
+    # Same trace with every ci-default fault armed (one trigger per site):
+    # the acceptance bar is completion + graceful absorption, the row is
+    # the cost. env REPRO_FAULT_PLAN=ci-default reaches the same plan via
+    # the CI chaos job; arming it in-process keeps this bench hermetic.
+    ledger.clear()
+    with faults.inject(dict(faults.CANNED_PLANS["ci-default"])):
+        rows["chaos_ci_default"] = _drive(model, params, requests)
+    rows["chaos_ci_default"]["ledger_events"] = ledger.count()
+    assert rows["chaos_ci_default"]["skipped_ticks"] >= 1
+    assert rows["chaos_ci_default"]["served"] >= 1
+    ledger.clear()
+
+    print(f"# continuous-batching serve: {N_REQUESTS} Poisson requests, "
+          f"rate {ARRIVAL_RATE}/tick, 4 slots, 12 usable pages ({ARCH} reduced)")
+    cols = ["tok_per_s", "p50_latency_ms", "p99_latency_ms", "served", "shed",
+            "timeout", "preempted", "skipped_ticks"]
+    print("run," + ",".join(cols))
+    for name, row in rows.items():
+        print(name + "," + ",".join(str(row[c]) for c in cols))
+
+    result = {
+        "arch": ARCH,
+        "requests": N_REQUESTS,
+        "prompt_len": PROMPT_LEN,
+        "arrival_rate_per_tick": ARRIVAL_RATE,
+        **rows,
+    }
+    return result if as_dict else rows
+
+
+if __name__ == "__main__":
+    run()

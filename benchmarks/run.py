@@ -11,6 +11,7 @@ Sections:
   moe          grouped-GEMM expert dispatch vs one-hot einsum (ms + bytes)
   sharded      ShardedPlan collective schedules: bytes-moved + step time
   distributed  Cannon phases, pipeline bubbles, ring-overlap wall-time
+  serve        continuous-batching Poisson load: throughput + p50/p99 latency
   train        short real training run (loss trajectory) on the demo config
   roofline     renders the dry-run roofline table (artifacts/pod16x16)
 """
@@ -28,6 +29,7 @@ from benchmarks import (
     bench_moe,
     bench_roofline,
     bench_scramble,
+    bench_serve,
     bench_sharded,
     bench_stepcounts,
     bench_symmetric,
@@ -63,6 +65,7 @@ SECTIONS = {
     "moe": bench_moe.run,
     "sharded": bench_sharded.run,
     "distributed": bench_distributed.run,
+    "serve": bench_serve.run,
     "train": bench_train,
     "roofline": bench_roofline.run,
 }
@@ -102,9 +105,9 @@ def main() -> None:
     if args.json and "kernels" not in names:
         names.append("kernels")
     if args.json and "kernels" in names:
-        # the kernels --json branch already runs the dispatch/moe/sharded
-        # microbenches for its payload — don't time the same calls twice
-        for ride_along in ("dispatch", "moe", "sharded"):
+        # the kernels --json branch already runs the dispatch/moe/sharded/
+        # serve microbenches for its payload — don't time the same calls twice
+        for ride_along in ("dispatch", "moe", "sharded", "serve"):
             if ride_along in names:
                 names.remove(ride_along)
     failed = []
@@ -121,6 +124,7 @@ def main() -> None:
                 payload["dispatch"] = bench_dispatch.run(as_dict=True)
                 payload["moe"] = bench_moe.run(as_dict=True)
                 payload["sharded"] = bench_sharded.run(as_dict=True)
+                payload["serve"] = bench_serve.run(as_dict=True)
                 _write_kernels_json(payload, time.perf_counter() - t0, args.json_path)
             else:
                 SECTIONS[name]()

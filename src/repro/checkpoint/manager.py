@@ -10,10 +10,20 @@ restore can target ANY mesh shape: `restore(..., shardings=tree)` device_puts
 each leaf with the new mesh's NamedShardings — this is the elastic-scaling
 path (N pods -> M pods) used by `launch/train.py --resume auto` and tested in
 tests/test_checkpoint.py.
+
+Reads are checksummed (DESIGN.md §11): `save` records a sha256 content
+digest of arrays.npz in meta.json, and `restore` verifies it before
+deserializing — a checkpoint whose bytes rotted (or were truncated by a
+dying writer that somehow survived the atomic rename) is quarantined to
+`<dir>.corrupt`, recorded in the resilience ledger, and surfaced as
+`CorruptCheckpointError`, so `all_steps()` never offers it for resume
+again (mirrors the autotune-cache quarantine).  Pre-digest checkpoints
+(no recorded digest) restore unverified for compatibility.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -23,7 +33,21 @@ from typing import Any, Dict, List, Optional
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+from repro.resilience import ledger as _ledger
+
+__all__ = ["CheckpointManager", "CorruptCheckpointError"]
+
+
+class CorruptCheckpointError(OSError):
+    """arrays.npz bytes do not match the digest recorded at save time."""
+
+
+def _file_digest(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return "sha256:" + h.hexdigest()
 
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
@@ -51,9 +75,15 @@ class CheckpointManager:
         tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_save_")
         try:
             flat = _flatten(tree)
-            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            arrays_path = os.path.join(tmp, "arrays.npz")
+            np.savez(arrays_path, **flat)
             treedef = jax.tree_util.tree_structure(tree)
-            meta = {"step": step, "treedef": str(treedef), **(extra_meta or {})}
+            meta = {
+                "step": step,
+                "treedef": str(treedef),
+                "digest": _file_digest(arrays_path),
+                **(extra_meta or {}),
+            }
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
             if os.path.exists(final):  # overwrite-same-step: replace atomically
@@ -94,6 +124,7 @@ class CheckpointManager:
         """Restore into the structure of `like` (a pytree of arrays or
         ShapeDtypeStructs).  With `shardings` (matching tree of NamedShardings)
         each leaf is device_put onto the *current* mesh — elastic re-mesh."""
+        self._verify_digest(step)
         path = os.path.join(self.directory, f"step_{step:08d}", "arrays.npz")
         data = np.load(path)
         leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
@@ -114,6 +145,33 @@ class CheckpointManager:
                 raise ValueError(f"{key}: checkpoint shape {arr.shape} != model {expect}")
             out.append(jax.device_put(arr, shd) if shd is not None else jax.numpy.asarray(arr))
         return treedef.unflatten(out)
+
+    def _verify_digest(self, step: int) -> None:
+        """Quarantine + raise if arrays.npz fails its recorded checksum.
+
+        `all_steps()` only parses `step_<digits>` names, so the `.corrupt`
+        -suffixed quarantine directory drops out of the resume candidates.
+        """
+        step_dir = os.path.join(self.directory, f"step_{step:08d}")
+        recorded = self.meta(step).get("digest")
+        if recorded is None:  # pre-digest checkpoint: restore unverified
+            return
+        actual = _file_digest(os.path.join(step_dir, "arrays.npz"))
+        if actual == recorded:
+            return
+        quarantine = step_dir + ".corrupt"
+        shutil.rmtree(quarantine, ignore_errors=True)
+        os.replace(step_dir, quarantine)
+        _ledger.record(
+            "checkpoint.read",
+            cause=f"digest mismatch: {actual} != recorded {recorded}",
+            fallback="quarantine",
+            step=step,
+        )
+        raise CorruptCheckpointError(
+            f"checkpoint step {step} failed its content digest "
+            f"({actual} != {recorded}); quarantined to {quarantine}"
+        )
 
     def meta(self, step: int) -> dict:
         with open(os.path.join(self.directory, f"step_{step:08d}", "meta.json")) as f:

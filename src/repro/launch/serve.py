@@ -41,7 +41,40 @@ from repro.resilience import faults as _faults
 from repro.resilience import ledger as _rledger
 from repro.train.train_step import make_prefill_step, make_serve_step
 
-__all__ = ["generate", "main", "report_plan_cache", "serve_requests"]
+__all__ = [
+    "generate",
+    "main",
+    "report_plan_cache",
+    "serve_requests",
+    "serving_steps",
+]
+
+
+# One jitted prefill/serve step pair per (model, ctx) for the whole process.
+# `generate()` used to call jax.jit on a fresh closure per request, so every
+# request re-traced even though GEMM plans were cached; now the first request
+# traces and the rest replay (asserted trace-flat in tests/test_scheduler.py).
+# Keyed on id(model) with the model stored in the entry so a dead id can't
+# alias a new model; ShardCtx is frozen/hashable.
+_STEP_CACHE: dict = {}
+
+
+def serving_steps(model, ctx: ShardCtx = ShardCtx()):
+    """Return the cached (prefill_step, serve_step) jitted pair for a model.
+
+    The serve step donates its state argument (the KV cache buffer is reused
+    across decode steps); the prefill step is shared with the
+    continuous-batching scheduler (`launch/scheduler.py`), which admits at
+    batch 1 through the same trace.
+    """
+    key = (id(model), ctx)
+    entry = _STEP_CACHE.get(key)
+    if entry is not None and entry[0] is model:
+        return entry[1], entry[2]
+    prefill = jax.jit(make_prefill_step(model, ctx))
+    serve = jax.jit(make_serve_step(model, ctx), donate_argnums=(2,))
+    _STEP_CACHE[key] = (model, prefill, serve)
+    return prefill, serve
 
 
 def report_plan_cache(prefix: str = "[serve]") -> dict:
@@ -113,8 +146,7 @@ def generate(
     """
     cfg = model.cfg
     b, t_prompt = prompts.shape
-    prefill = jax.jit(make_prefill_step(model, ctx))
-    serve = jax.jit(make_serve_step(model, ctx), donate_argnums=(2,))
+    prefill, serve = serving_steps(model, ctx)
 
     batch = {"tokens": prompts, "labels": prompts}
     if cfg.family == "vlm":
@@ -138,7 +170,10 @@ def generate(
         toks.append(next_tok)
     jax.block_until_ready(toks[-1])
     dt = time.monotonic() - t0
-    steps_per_s = (gen_len - 1) / dt if dt > 0 else float("inf")
+    # Degenerate timings (gen_len == 1, or a clock that didn't advance)
+    # report 0.0, never inf — the rate lands in printed stats and
+    # BENCH_kernels.json, and inf is invalid JSON.
+    steps_per_s = (gen_len - 1) / dt if dt > 0 and gen_len > 1 else 0.0
     return jnp.stack(toks, axis=1), steps_per_s
 
 
@@ -196,6 +231,13 @@ def main(argv=None) -> None:
         "reported and skipped, not fatal",
     )
     ap.add_argument(
+        "--scheduler",
+        action="store_true",
+        help="serve through the continuous-batching scheduler (paged KV "
+        "cache, admission control, deadlines) instead of one batch per "
+        "request — each request becomes one single-prompt scheduler request",
+    )
+    ap.add_argument(
         "--plan-stats",
         action="store_true",
         help="print the GEMM plan cache after serving (one plan per spec)",
@@ -236,16 +278,55 @@ def main(argv=None) -> None:
     ]
 
     _faults.install_env_plan()
-    results = serve_requests(model, params, request_prompts, gen_len=args.gen, ctx=ctx)
-    print(f"[serve] {args.arch} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
-    for r, res in enumerate(results):
-        if res is None:
-            continue
-        out, rate = res
-        print(
-            f"[serve] req {r}: decode steps/s {rate:.2f} "
-            f"({rate * args.batch:.1f} tok/s batched), row 0: {np.asarray(out[0])[:16]}"
+    if args.scheduler:
+        from repro.launch.scheduler import ContinuousBatchingServer, Request, ServeConfig
+
+        total_len = args.prompt_len + args.gen
+        if cfg.family == "vlm":
+            total_len += cfg.num_stub_patches
+        pages_per_seq = -(-total_len // 8)  # ceil
+        scfg = ServeConfig(
+            max_slots=args.batch,
+            page_size=8,
+            num_pages=1 + args.batch * pages_per_seq,
+            max_pages_per_seq=pages_per_seq,
+            queue_capacity=max(args.requests, 1),
+            warmup_prompt_lens=(args.prompt_len,),
         )
+        server = ContinuousBatchingServer(model, params, scfg, ctx)
+        server.warmup()
+        reqs = [
+            Request(rid=f"req{r}", prompt=np.asarray(p[0]), max_new_tokens=args.gen)
+            for r, p in enumerate(request_prompts)
+        ]
+        t0 = time.monotonic()
+        results_by_rid = server.run(reqs)
+        dt = time.monotonic() - t0
+        print(
+            f"[serve] {args.arch} scheduler slots={scfg.max_slots} "
+            f"pages={scfg.num_pages}x{scfg.page_size} prompt={args.prompt_len} "
+            f"gen={args.gen} ticks={server.counters['ticks']}"
+        )
+        for r in reqs:
+            res = results_by_rid[r.rid]
+            head = res.tokens[:16] if res.tokens else []
+            print(
+                f"[serve] {res.rid}: {res.status:9s} {len(res.tokens)} tokens "
+                f"lat={res.latency_s * 1e3:.1f}ms {head}"
+            )
+        rate = server.counters["decode_tokens"] / dt if dt > 0 else 0.0
+        print(f"[serve] {server.counters}, {rate:.1f} tok/s")
+    else:
+        results = serve_requests(model, params, request_prompts, gen_len=args.gen, ctx=ctx)
+        print(f"[serve] {args.arch} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
+        for r, res in enumerate(results):
+            if res is None:
+                continue
+            out, rate = res
+            print(
+                f"[serve] req {r}: decode steps/s {rate:.2f} "
+                f"({rate * args.batch:.1f} tok/s batched), row 0: {np.asarray(out[0])[:16]}"
+            )
     if args.plan_stats:
         report_plan_cache()
     if _rledger.count():

@@ -22,7 +22,13 @@ import jax.numpy as jnp
 
 from repro.models.layers import PSpec, ShardCtx, apply_rope, dense
 
-__all__ = ["attn_specs", "attention", "init_cache_shape", "Cache"]
+__all__ = [
+    "attn_specs",
+    "attention",
+    "attention_paged_decode",
+    "init_cache_shape",
+    "Cache",
+]
 
 Cache = Dict[str, jax.Array]  # {"k": (B, T, KV, hd), "v": (B, T, KV, hd)}
 
@@ -139,6 +145,80 @@ def _sdpa(
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkrts,bskd->btkrd", probs, v)
     return out.reshape(b, tq, h, hd)
+
+
+def attention_paged_decode(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # (S, 1, D) — one new token per sequence slot
+    cfg,
+    ctx: ShardCtx,
+    *,
+    k_pool: jax.Array,  # (P, page_size, KV, hd) shared page pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (S, n_pages) int32
+    positions: jax.Array,  # (S,) int32 — each slot's current length
+    impl: Optional[str] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Single-token decode against a paged KV pool (DESIGN.md §12).
+
+    The per-slot analogue of the `cache=...` branch of `attention`: the new
+    K/V lands in page `block_tables[s, pos // page_size]` at in-page offset
+    `pos % page_size`, then the slot attends over its pages through
+    `kernels.paged_attention`.  Per-slot positions replace the shared scalar
+    `cache_pos`, so every slot can sit at a different depth — the property
+    continuous batching needs.  Op-for-op identical per row to the dense
+    decode path (the xla_gather impl mirrors `_sdpa`), so a request served
+    through pages is bitwise-equal to `generate()`.
+
+    Inactive slots (all-zero block table, position 0) write into page 0 —
+    the scheduler's reserved scratch page — and their output is discarded.
+    Returns (y (S, 1, D), (k_pool, v_pool) with the token written).
+    """
+    from repro.kernels.paged_attention import paged_attention
+
+    s, t, _ = x.shape
+    if t != 1:
+        raise ValueError(f"paged decode is single-token; got T={t}")
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    pos2 = positions[:, None]  # (S, 1) per-row positions for RoPE
+
+    q = dense(x, p["wq"], cfg, p.get("bq")).reshape(s, 1, h, hd)
+    k = dense(x, p["wk"], cfg, p.get("bk")).reshape(s, 1, kvh, hd)
+    v = dense(x, p["wv"], cfg, p.get("bv")).reshape(s, 1, kvh, hd)
+    q = apply_rope(q, pos2, cfg.rope_theta)
+    k = apply_rope(k, pos2, cfg.rope_theta)
+    q = ctx.c(q, ("batch", "seq", "heads", "head_dim"))
+
+    ps = k_pool.shape[1]
+    pool_shape = k_pool.shape
+    page = jnp.take_along_axis(block_tables, (positions // ps)[:, None], axis=1)
+    flat = page[:, 0] * ps + positions % ps  # (S,) rows in the (P*ps, ...) view
+    k_pool = (
+        k_pool.reshape(-1, kvh, hd)
+        .at[flat]
+        .set(k[:, 0].astype(k_pool.dtype))
+        .reshape(pool_shape)
+    )
+    v_pool = (
+        v_pool.reshape(-1, kvh, hd)
+        .at[flat]
+        .set(v[:, 0].astype(v_pool.dtype))
+        .reshape(pool_shape)
+    )
+
+    out = paged_attention(
+        q.reshape(s, h, hd),
+        k_pool,
+        v_pool,
+        block_tables,
+        positions + 1,  # valid length includes the token just written
+        impl=impl,
+        interpret=interpret,
+    ).reshape(s, 1, h, hd)
+    out = ctx.c(out, ("batch", "seq", "heads", "head_dim"))
+    y = dense(out.reshape(s, 1, h * hd), p["wo"], cfg)
+    return ctx.c(y, ("batch", "seq", "embed")), (k_pool, v_pool)
 
 
 def attention(

@@ -43,6 +43,11 @@ class Model:
     _prefill: Callable
     _decode: Callable
     _state_specs: Callable  # (batch, max_len) -> abstract decode state
+    # Paged-KV decode for the continuous-batching scheduler (DESIGN.md §12).
+    # None for families whose decode state is not a KV cache: recurrent
+    # families (ssm) carry O(1) state and are batched by stacking it per
+    # slot instead; hybrid/audio are not schedulable (see launch/scheduler).
+    _paged_decode: Optional[Callable] = None
 
     # -- parameters ---------------------------------------------------------
     def specs(self):
@@ -78,6 +83,47 @@ class Model:
 
     def decode_state_specs(self, batch: int, max_len: int):
         return self._state_specs(self.cfg, batch, max_len)
+
+    # -- paged serving (continuous batching) ---------------------------------
+    @property
+    def supports_paged(self) -> bool:
+        return self._paged_decode is not None
+
+    def paged_decode(
+        self,
+        params,
+        tokens,  # (S, 1)
+        pools,  # {"k","v"}: (L, P, page_size, KV, hd)
+        block_tables,  # (S, n_pages)
+        positions,  # (S,)
+        ctx: ShardCtx = ShardCtx(),
+        *,
+        impl: Optional[str] = None,
+        interpret: bool = False,
+    ):
+        """One continuous-batching decode step against paged KV pools."""
+        if self._paged_decode is None:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no paged decode path"
+            )
+        return self._paged_decode(
+            params,
+            tokens,
+            pools,
+            block_tables,
+            positions,
+            self.cfg,
+            ctx,
+            impl=impl,
+            interpret=interpret,
+        )
+
+    def paged_pool_specs(self, num_pages: int, page_size: int):
+        if self._paged_decode is None:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no paged decode path"
+            )
+        return transformer.paged_pool_specs(self.cfg, num_pages, page_size)
 
     # -- dry-run input specs --------------------------------------------------
     def batch_specs(self, shape: ShapeSpec) -> Tuple[Dict[str, Any], Dict[str, Any]]:
@@ -188,6 +234,7 @@ def get_model(cfg: ArchConfig) -> Model:
             _lm_prefill,
             transformer.lm_decode,
             lambda c, b, m: transformer.decode_cache_specs(c, b, m),
+            _paged_decode=transformer.lm_decode_paged,
         )
     if fam == "ssm":
         return Model(
@@ -224,5 +271,8 @@ def get_model(cfg: ArchConfig) -> Model:
             vlm.vlm_prefill,
             vlm.vlm_decode,
             lambda c, b, m: vlm.vlm_cache_specs(c, b, m + c.num_stub_patches),
+            # vlm decode is structurally lm_decode (patches only affect
+            # prefill); the scheduler offsets positions by num_stub_patches.
+            _paged_decode=transformer.lm_decode_paged,
         )
     raise ValueError(f"unknown family {fam!r}")

@@ -25,7 +25,12 @@ import jax.numpy as jnp
 
 from repro.core.scramble import scramble_order
 from repro.kernels.ops import scramble_blocks
-from repro.models.attention import attention, attn_specs, init_cache_shape
+from repro.models.attention import (
+    attention,
+    attention_paged_decode,
+    attn_specs,
+    init_cache_shape,
+)
 from repro.models.layers import PSpec, ShardCtx, gemm, padded_vocab, rmsnorm
 from repro.models.moe import moe_block, moe_specs, swiglu, swiglu_specs
 
@@ -34,6 +39,8 @@ __all__ = [
     "lm_forward",
     "lm_prefill",
     "lm_decode",
+    "lm_decode_paged",
+    "paged_pool_specs",
     "stack_specs",
     "embed_tokens",
     "unembed",
@@ -201,6 +208,90 @@ def lm_decode(
     x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches), unroll=cfg.scan_unroll)
     logits = unembed(params, x, cfg, ctx)
     return logits, new_caches
+
+
+def block_apply_paged(
+    p: Dict[str, Any],
+    x: jax.Array,  # (S, 1, D)
+    cfg,
+    ctx: ShardCtx,
+    *,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    positions: jax.Array,
+    impl: Optional[str] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """`block_apply`'s decode branch against a paged KV pool (DESIGN.md §12)."""
+    h, pools = attention_paged_decode(
+        p["attn"],
+        rmsnorm(x, p["ln1"], cfg.norm_eps),
+        cfg,
+        ctx,
+        k_pool=k_pool,
+        v_pool=v_pool,
+        block_tables=block_tables,
+        positions=positions,
+        impl=impl,
+        interpret=interpret,
+    )
+    x = x + h
+    if cfg.is_moe:
+        h2, _ = moe_block(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, ctx)
+    else:
+        h2 = swiglu(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, ctx)
+    return x + h2, pools
+
+
+def lm_decode_paged(
+    params,
+    tokens: jax.Array,  # (S, 1) — one token per sequence slot
+    pools,  # {"k","v"}: (L, P, page_size, KV, hd) shared page pools
+    block_tables: jax.Array,  # (S, n_pages) int32
+    positions: jax.Array,  # (S,) int32 per-slot lengths
+    cfg,
+    ctx: ShardCtx = ShardCtx(),
+    *,
+    impl: Optional[str] = None,
+    interpret: bool = False,
+):
+    """One continuous-batching decode step: every slot advances one token
+    against its own block-table pages (per-slot positions — slots sit at
+    different depths).  Returns (logits (S, 1, V), updated pools)."""
+    x = embed_tokens(params, tokens, cfg, ctx)
+
+    def body(x, layer_in):
+        lp, kp, vp = layer_in
+        y, (nk, nv) = block_apply_paged(
+            lp,
+            x,
+            cfg,
+            ctx,
+            k_pool=kp,
+            v_pool=vp,
+            block_tables=block_tables,
+            positions=positions,
+            impl=impl,
+            interpret=interpret,
+        )
+        return y, (nk, nv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["blocks"], pools["k"], pools["v"]), unroll=cfg.scan_unroll
+    )
+    logits = unembed(params, x, cfg, ctx)
+    return logits, {"k": ks, "v": vs}
+
+
+def paged_pool_specs(cfg, num_pages: int, page_size: int):
+    """Abstract stacked page pools for the serving scheduler (one per layer)."""
+    kv, hd = cfg.num_kv_heads, cfg.head_dim_
+    shp = (cfg.num_layers, num_pages, page_size, kv, hd)
+    return {
+        "k": jax.ShapeDtypeStruct(shp, cfg.adtype),
+        "v": jax.ShapeDtypeStruct(shp, cfg.adtype),
+    }
 
 
 def decode_cache_specs(cfg, batch: int, max_len: int):

@@ -32,6 +32,13 @@ Named sites instrumented across the repo:
                       retry loop (ctx: step)
   serve.request       `launch/serve.serve_requests` per-request boundary
                       (ctx: request)
+  serve.admit         `launch/scheduler` admission — a fired fault sheds
+                      that one request (ctx: rid)
+  serve.step          `launch/scheduler` tick boundary — a fired fault
+                      skips the tick, never the server (ctx: tick)
+  kv.page_alloc       `launch/scheduler.PageAllocator.alloc` — a fired
+                      fault defers/stalls the allocation one tick
+                      (ctx: reason, rid)
 
 The canned plan registry backs `REPRO_FAULT_PLAN` (the chaos CI job sets
 `REPRO_FAULT_PLAN=ci-default`); `install_env_plan()` arms it for the process.
@@ -225,6 +232,9 @@ CANNED_PLANS: Dict[str, Dict[str, FaultSpec]] = {
         "kernel.output": FaultSpec(times=1, poison="nan"),
         "checkpoint.write": FaultSpec(times=1, error=OSError),
         "serve.request": FaultSpec(times=1),
+        "serve.admit": FaultSpec(times=1),
+        "serve.step": FaultSpec(times=1),
+        "kv.page_alloc": FaultSpec(times=1),
     },
 }
 

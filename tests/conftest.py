@@ -74,6 +74,17 @@ def _chaos_env_plan(tmp_path_factory):
     except faults.FaultError:
         pass
 
+    # serve.admit / serve.step / kv.page_alloc fire inside the continuous-
+    # batching scheduler loop; consume the session-plan triggers at the raw
+    # sites so scheduler tests see a dormant plan (their degradation paths
+    # are proven with test-local plans in tests/test_scheduler.py, and end
+    # to end by the chaos CI scheduler smoke).
+    for site in ("serve.admit", "serve.step", "kv.page_alloc"):
+        try:
+            faults.check(site, warmup=True)
+        except faults.FaultError:
+            pass
+
     unfired = [s for s in plan.sites() if plan.fired(s) < 1]
     assert not unfired, f"chaos warmup left sites unfired: {unfired}"
     assert ledger.count() > 0  # the degradations were recorded, not silent

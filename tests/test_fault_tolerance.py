@@ -97,6 +97,61 @@ def test_overwrite_same_step_atomic(tmp_path):
     np.testing.assert_array_equal(np.asarray(out["x"]), np.ones((2,)))
 
 
+# --- checksummed reads ----------------------------------------------------------
+
+
+def test_save_records_content_digest(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    path = ckpt.save(1, {"x": jnp.arange(4.0)})
+    digest = ckpt.meta(1)["digest"]
+    assert digest.startswith("sha256:")
+    from repro.checkpoint.manager import _file_digest
+
+    assert digest == _file_digest(os.path.join(path, "arrays.npz"))
+
+
+def test_corrupt_checkpoint_quarantined_and_skipped(tmp_path):
+    """Flipped bytes in arrays.npz -> CorruptCheckpointError, the step dir is
+    renamed to .corrupt (so all_steps() stops offering it for resume), and the
+    degradation lands in the resilience ledger."""
+    from repro.checkpoint.manager import CorruptCheckpointError
+    from repro.resilience import ledger
+
+    ledger.clear()
+    ckpt = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.arange(4.0)}
+    ckpt.save(1, tree)
+    ckpt.save(2, tree)
+    arrays = os.path.join(str(tmp_path), "step_00000001", "arrays.npz")
+    with open(arrays, "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([f.read(1)[0] ^ 0xFF]))
+    with pytest.raises(CorruptCheckpointError, match="digest"):
+        ckpt.restore(1, tree)
+    assert os.path.isdir(os.path.join(str(tmp_path), "step_00000001.corrupt"))
+    assert ckpt.all_steps() == [2]  # resume falls through to the good step
+    out = ckpt.restore(2, tree)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.arange(4.0))
+    (ev,) = ledger.events("checkpoint.read")
+    assert ev.fallback == "quarantine" and "digest mismatch" in ev.cause
+
+
+def test_predigest_checkpoint_restores_unverified(tmp_path):
+    """Checkpoints written before digests existed have no recorded digest —
+    they restore without verification instead of being rejected."""
+    ckpt = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.arange(3.0)}
+    ckpt.save(1, tree)
+    meta_path = os.path.join(str(tmp_path), "step_00000001", "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["digest"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    out = ckpt.restore(1, tree)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.arange(3.0))
+
+
 # --- async writer ---------------------------------------------------------------
 
 

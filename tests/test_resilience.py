@@ -121,6 +121,9 @@ def test_ci_default_plan_covers_all_documented_sites():
         "collective.step",
         "checkpoint.write",
         "serve.request",
+        "serve.admit",
+        "serve.step",
+        "kv.page_alloc",
     }
     assert set(faults.CANNED_PLANS["ci-default"]) == want
 
