@@ -160,9 +160,13 @@ class PageAllocator:
             self._free.append(p)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class _Seq:
-    """One admitted sequence occupying a decode slot."""
+    """One admitted sequence occupying a decode slot.
+
+    Identity semantics (eq=False): membership checks against `_active` must
+    mean "this exact sequence object is still live", never field equality.
+    """
 
     req: Request
     slot: int
@@ -299,6 +303,11 @@ class ContinuousBatchingServer:
     def _pages_for(self, length: int) -> int:
         return -(-length // self.cfg.page_size)  # ceil
 
+    def _deadline_ticks(self, req: Request) -> int:
+        # `is not None`, not truthiness: an explicit deadline=0 means "expire
+        # immediately", not "use the default".
+        return req.deadline if req.deadline is not None else self.cfg.default_deadline
+
     def _fits(self, req: Request) -> Optional[str]:
         """None if the request can ever be served, else the shed reason."""
         total = self._prefill_len(req) + req.max_new_tokens
@@ -336,6 +345,7 @@ class ContinuousBatchingServer:
     def _evict(self, seq: _Seq, status: str, reason: str) -> None:
         if self._paged and seq.pages:
             self.alloc.free(seq.pages)
+            seq.pages = []  # retired sequences must never grow or double-free
         self._free_slots.append(seq.slot)
         self._active.remove(seq)
         self._finish(seq.req.rid, status, seq.tokens, reason=reason,
@@ -394,7 +404,7 @@ class ContinuousBatchingServer:
                 self._evict(seq, "timeout", "deadline")
         still = []
         for req, tick, t0 in self._queue:
-            ddl = tick + (req.deadline or self.cfg.default_deadline)
+            ddl = tick + self._deadline_ticks(req)
             if self._tick >= ddl:
                 ledger.record(
                     "serve.timeout", cause="deadline_queued", fallback="evict",
@@ -455,8 +465,7 @@ class ContinuousBatchingServer:
                 pages=pages,
                 pos=prefill_len,
                 tokens=[int(first_tok[0])],
-                deadline_tick=submitted_tick
-                + (req.deadline or self.cfg.default_deadline),
+                deadline_tick=submitted_tick + self._deadline_ticks(req),
                 admit_tick=self._tick,
                 submitted_tick=submitted_tick,
                 submitted_at=submitted_at,
@@ -480,6 +489,11 @@ class ContinuousBatchingServer:
         if not self._paged:
             return
         for seq in list(self._active):
+            # An earlier sequence's _preempt_for may have evicted this one
+            # (identity check: _Seq is eq=False); a retired sequence must not
+            # claim fresh pages — they would leak — or preempt live peers.
+            if seq not in self._active:
+                continue
             seq.stalled = False
             needed = seq.pos // self.cfg.page_size + 1
             while len(seq.pages) < needed:
@@ -487,7 +501,11 @@ class ContinuousBatchingServer:
                     seq.pages += self.alloc.alloc(1, reason="grow", rid=seq.req.rid)
                 except PagesExhausted:
                     if not self._preempt_for(seq):
-                        return  # seq itself was evicted
+                        # seq itself was the victim: stop growing IT, but the
+                        # remaining active sequences still need their pages
+                        # before this tick decodes (a missed growth here would
+                        # silently write KV through scratch page 0).
+                        break
                 except faults.FaultError as e:
                     # Transient (injected) allocator failure: the sequence
                     # sits out this tick and retries, it is NOT evicted.

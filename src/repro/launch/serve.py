@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -55,8 +56,13 @@ __all__ = [
 # request re-traced even though GEMM plans were cached; now the first request
 # traces and the rest replay (asserted trace-flat in tests/test_scheduler.py).
 # Keyed on id(model) with the model stored in the entry so a dead id can't
-# alias a new model; ShardCtx is frozen/hashable.
-_STEP_CACHE: dict = {}
+# alias a new model; ShardCtx is frozen/hashable.  The cache is a bounded LRU:
+# the jitted closures capture the model strongly (so weakrefs would never
+# collect), and a long-lived process cycling through many models must not
+# grow memory without bound — least-recently-served pairs are dropped and
+# simply re-trace if that model ever comes back.
+_STEP_CACHE: "OrderedDict" = OrderedDict()
+_STEP_CACHE_MAX = 8
 
 
 def serving_steps(model, ctx: ShardCtx = ShardCtx()):
@@ -70,10 +76,13 @@ def serving_steps(model, ctx: ShardCtx = ShardCtx()):
     key = (id(model), ctx)
     entry = _STEP_CACHE.get(key)
     if entry is not None and entry[0] is model:
+        _STEP_CACHE.move_to_end(key)
         return entry[1], entry[2]
     prefill = jax.jit(make_prefill_step(model, ctx))
     serve = jax.jit(make_serve_step(model, ctx), donate_argnums=(2,))
     _STEP_CACHE[key] = (model, prefill, serve)
+    while len(_STEP_CACHE) > _STEP_CACHE_MAX:
+        _STEP_CACHE.popitem(last=False)
     return prefill, serve
 
 

@@ -280,6 +280,100 @@ def test_self_preemption_when_requester_is_lowest_priority(dense):
     assert server.alloc.free_count == scfg.num_pages - 1
 
 
+def test_self_preemption_first_in_order_still_grows_survivors(dense):
+    """Regression: three sequences hit a page turn on the same tick with the
+    pool exhausted; the FIRST one in iteration order self-evicts (it is the
+    lowest priority).  The two survivors must still claim their growth pages
+    before the tick decodes — an early exit here would let them write the
+    boundary token's KV through scratch page 0 and silently diverge."""
+    model, params = dense
+    ledger.clear()
+    scfg = ServeConfig(
+        max_slots=3, page_size=8, num_pages=7, max_pages_per_seq=3, queue_capacity=4
+    )
+    server = ContinuousBatchingServer(model, params, scfg)
+
+    # Deterministic invariant spy: at every decode, each non-stalled active
+    # sequence must already hold the page its next write lands in.  (The
+    # token-level assertion below can pass by luck — a zeroed KV entry does
+    # not always flip the argmax in a reduced random model — this cannot.)
+    orig_decode_tick = server._decode_tick
+
+    def checked_decode_tick():
+        for s in server._active:
+            if not s.stalled:
+                assert len(s.pages) >= s.pos // scfg.page_size + 1, (
+                    f"{s.req.rid} decoding at pos={s.pos} with only "
+                    f"{len(s.pages)} pages: KV would land in scratch page 0"
+                )
+        orig_decode_tick()
+
+    server._decode_tick = checked_decode_tick
+
+    # w0 admitted first (iterates first) and lowest priority -> self-evicts.
+    reqs = [
+        Request(rid=f"w{i}", prompt=_prompt(i), max_new_tokens=16,
+                priority=0 if i == 0 else 1)
+        for i in range(3)
+    ]
+    results = server.run(reqs)
+    assert results["w0"].status == "preempted" and 0 < len(results["w0"].tokens) < 16
+    for i in (1, 2):
+        assert results[f"w{i}"].status == "ok"
+        assert results[f"w{i}"].tokens == _legacy_tokens(model, params, _prompt(i), 16)
+    (ev,) = ledger.events("serve.preempt")
+    detail = dict(ev.detail)
+    assert detail["rid"] == "'w0'" and detail["for_rid"] == "'w0'"
+    assert server.alloc.free_count == scfg.num_pages - 1
+
+
+def test_preemption_victim_later_in_snapshot_does_not_leak_pages(dense):
+    """Regression: the victim evicted for an earlier sequence's growth also
+    appears later in the iteration snapshot.  A retired sequence must be
+    skipped there — processing it would alloc fresh pages onto a dead
+    sequence (leaked forever) and, with the pool dry, preempt a LIVE one."""
+    model, params = dense
+    ledger.clear()
+    scfg = ServeConfig(
+        max_slots=3, page_size=8, num_pages=7, max_pages_per_seq=3, queue_capacity=4
+    )
+    server = ContinuousBatchingServer(model, params, scfg)
+    # u2 is lowest priority but iterates LAST; u0's growth evicts it first.
+    reqs = [
+        Request(rid=f"u{i}", prompt=_prompt(i), max_new_tokens=16,
+                priority=0 if i == 2 else 1)
+        for i in range(3)
+    ]
+    results = server.run(reqs)
+    assert results["u2"].status == "preempted" and 0 < len(results["u2"].tokens) < 16
+    for i in (0, 1):
+        assert results[f"u{i}"].status == "ok"
+        assert results[f"u{i}"].tokens == _legacy_tokens(model, params, _prompt(i), 16)
+    # exactly ONE preemption: the dead victim never preempted a live peer
+    (ev,) = ledger.events("serve.preempt")
+    assert dict(ev.detail)["rid"] == "'u2'"
+    assert server.counters["preempted"] == 1
+    # and no pages leaked onto the retired sequence
+    assert server.alloc.free_count == scfg.num_pages - 1
+
+
+def test_explicit_zero_deadline_expires_immediately(dense):
+    """Regression: deadline=0 is an explicit 'expire now', not falsy sugar
+    for the 512-tick default."""
+    model, params = dense
+    ledger.clear()
+    scfg = ServeConfig(
+        max_slots=1, page_size=8, num_pages=9, max_pages_per_seq=2, queue_capacity=4
+    )
+    server = ContinuousBatchingServer(model, params, scfg)
+    server.submit(Request(rid="z0", prompt=_prompt(0), max_new_tokens=4, deadline=0))
+    server.step()
+    res = server.results["z0"]
+    assert res.status == "timeout" and res.reason == "deadline_queued"
+    assert res.tokens == []
+    assert server.pending == 0
+
+
 # -- fault sites (the ci-default triggers) ----------------------------------
 
 
@@ -453,6 +547,32 @@ def test_generate_trace_count_flat_across_requests(dense):
     assert serving_steps(model, ctx) == (prefill, serve)  # cache hit, same objects
     assert prefill._cache_size() == base_p
     assert serve._cache_size() == base_s
+
+
+def test_step_cache_is_bounded():
+    """Regression: the per-(model, ctx) step cache is a bounded LRU.  The
+    jitted closures capture their model strongly, so an unbounded cache in a
+    long-lived process that keeps constructing models grows memory forever;
+    least-recently-served entries must be dropped instead."""
+    from repro.launch import serve as serve_mod
+
+    saved = dict(serve_mod._STEP_CACHE)
+    try:
+        serve_mod._STEP_CACHE.clear()
+        ctx = ShardCtx()
+        models = [object() for _ in range(serve_mod._STEP_CACHE_MAX + 3)]
+        for m in models:
+            serving_steps(m, ctx)  # steps are built lazily; never traced here
+        assert len(serve_mod._STEP_CACHE) == serve_mod._STEP_CACHE_MAX
+        # the most recent model is still cached: a hit returns the same pair
+        pair = serving_steps(models[-1], ctx)
+        assert serving_steps(models[-1], ctx) == pair
+        # the oldest was evicted: its key is gone from the cache
+        assert all(entry[0] is not models[0]
+                   for entry in serve_mod._STEP_CACHE.values())
+    finally:
+        serve_mod._STEP_CACHE.clear()
+        serve_mod._STEP_CACHE.update(saved)
 
 
 def test_generate_degenerate_timing_reports_zero(dense):
