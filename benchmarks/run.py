@@ -10,6 +10,7 @@ Sections:
   dispatch     plan/execute dispatch overhead (eager matmul vs pre-built Plan)
   moe          grouped-GEMM expert dispatch vs one-hot einsum (ms + bytes)
   sharded      ShardedPlan collective schedules: bytes-moved + step time
+  costmodel    cost-model predicted vs measured ms + schedule-ranking accuracy
   distributed  Cannon phases, pipeline bubbles, ring-overlap wall-time
   serve        continuous-batching Poisson load: throughput + p50/p99 latency
   train        short real training run (loss trajectory) on the demo config
@@ -23,6 +24,7 @@ import time
 import traceback
 
 from benchmarks import (
+    bench_costmodel,
     bench_dispatch,
     bench_distributed,
     bench_kernels,
@@ -64,6 +66,7 @@ SECTIONS = {
     "dispatch": bench_dispatch.run,
     "moe": bench_moe.run,
     "sharded": bench_sharded.run,
+    "costmodel": bench_costmodel.run,
     "distributed": bench_distributed.run,
     "serve": bench_serve.run,
     "train": bench_train,
@@ -107,7 +110,7 @@ def main() -> None:
     if args.json and "kernels" in names:
         # the kernels --json branch already runs the dispatch/moe/sharded/
         # serve microbenches for its payload — don't time the same calls twice
-        for ride_along in ("dispatch", "moe", "sharded", "serve"):
+        for ride_along in ("dispatch", "moe", "sharded", "costmodel", "serve"):
             if ride_along in names:
                 names.remove(ride_along)
     failed = []
@@ -124,6 +127,7 @@ def main() -> None:
                 payload["dispatch"] = bench_dispatch.run(as_dict=True)
                 payload["moe"] = bench_moe.run(as_dict=True)
                 payload["sharded"] = bench_sharded.run(as_dict=True)
+                payload["costmodel"] = bench_costmodel.run(as_dict=True)
                 payload["serve"] = bench_serve.run(as_dict=True)
                 _write_kernels_json(payload, time.perf_counter() - t0, args.json_path)
             else:

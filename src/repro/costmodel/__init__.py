@@ -1,0 +1,66 @@
+"""Cost-model subsystem (DESIGN.md §13): the planner's brain.
+
+`model` turns a plan's describe() record into roofline terms and predicted
+seconds under per-platform coefficients; `calibrate` fits those coefficients
+from measured probes (versioned `.costmodel_cache.json`); `choose` ranks
+candidate backends / block shapes / collective schedules / mesh shardings
+for `kernels.api.plan()` and records the decision provenance.
+"""
+
+from repro.costmodel.calibrate import (
+    CALIBRATION_VERSION,
+    CalibrationCache,
+    calibrate,
+    clear_coefficients_memo,
+    current_coefficients,
+    default_cache,
+    fit_coefficients,
+    ingest,
+    run_probes,
+)
+from repro.costmodel.choose import (
+    Decision,
+    NoLegalCandidate,
+    choose_blocks,
+    clear_decision_memo,
+    decide_backend,
+    decide_schedule,
+    decide_sharding,
+)
+from repro.costmodel.model import (
+    COST_MODEL_VERSION,
+    CostCoefficients,
+    default_coefficients,
+    predict,
+    predict_blocks_ms,
+    repeat_amortization,
+    structure_step_factor,
+    terms_from_describe,
+)
+
+__all__ = [
+    "CALIBRATION_VERSION",
+    "COST_MODEL_VERSION",
+    "CalibrationCache",
+    "CostCoefficients",
+    "Decision",
+    "NoLegalCandidate",
+    "calibrate",
+    "choose_blocks",
+    "clear_coefficients_memo",
+    "clear_decision_memo",
+    "current_coefficients",
+    "decide_backend",
+    "decide_schedule",
+    "decide_sharding",
+    "default_cache",
+    "default_coefficients",
+    "fit_coefficients",
+    "ingest",
+    "predict",
+    "predict_blocks_ms",
+    "repeat_amortization",
+    "run_probes",
+    "structure_step_factor",
+    "terms_from_describe",
+]

@@ -406,6 +406,12 @@ class GemmSpec:
     stagger: bool = True
     shard: Optional[ShardSpec] = None
     group: Optional[GroupSpec] = None
+    # Caller hint: how many products this plan will run back-to-back with the
+    # SAME B (decode loops, repeated layers).  Per the cross-wired mesh-array
+    # analysis (Kak, arXiv:1411.3273) repeated products amortize the fill
+    # latency and the resident-operand traffic — the cost model scales its
+    # per-call estimate accordingly.  Numerics are unaffected.
+    repeats: int = 1
 
     def __post_init__(self):
         if self.structure not in STRUCTURES:
@@ -442,6 +448,9 @@ class GemmSpec:
                     f" num_groups*rows_per_group={self.group.rows}"
                     f" (use GemmSpec.for_groups)"
                 )
+        object.__setattr__(self, "repeats", int(self.repeats))
+        if self.repeats < 1:
+            raise ValueError(f"repeats must be >= 1, got {self.repeats}")
         object.__setattr__(self, "batch", tuple(int(d) for d in self.batch))
         object.__setattr__(self, "dtype_a", _dtype_name(self.dtype_a))
         object.__setattr__(self, "dtype_b", _dtype_name(self.dtype_b))
@@ -467,6 +476,7 @@ class GemmSpec:
         blocks=None,
         stagger: bool = True,
         shard: Optional[ShardSpec] = None,
+        repeats: int = 1,
     ) -> "GemmSpec":
         """Spec for concrete (or abstract) operands; leading dims of `a` become
         the batch, shared with `b` when `b` carries the same leading dims."""
@@ -491,6 +501,7 @@ class GemmSpec:
             blocks=blocks,
             stagger=stagger,
             shard=shard,
+            repeats=repeats,
         )
 
     @classmethod
@@ -507,6 +518,7 @@ class GemmSpec:
         blocks=None,
         stagger: bool = True,
         shard: Optional[ShardSpec] = None,
+        repeats: int = 1,
     ) -> "GemmSpec":
         """Spec for a grouped GEMM: (group.rows, k) tokens in the capacity
         layout against (group.num_groups, k, n) stacked weights."""
@@ -522,6 +534,7 @@ class GemmSpec:
             stagger=stagger,
             shard=shard,
             group=group,
+            repeats=repeats,
         )
 
     # -- derived quantities used at plan time --------------------------------
@@ -761,9 +774,17 @@ def default_backend(name: str):
         set_default(prev)
 
 
-def _choose_backend(spec: GemmSpec) -> _Backend:
-    """Capability-based choice: the pinned default first (if capable), then
-    xla, then pallas_mesh, then registration order."""
+def _choose_backend(spec: GemmSpec) -> Tuple[_Backend, Optional[Dict[str, Any]]]:
+    """Capability + cost choice, returning (backend, decision provenance).
+
+    A CAPABLE pinned default wins immediately — explicit user intent beats
+    any model.  Otherwise the capable set is ranked by the cost model's
+    per-backend efficiency (`costmodel.choose.decide_backend`); with the
+    shipped coefficients the predicted order IS the legacy xla ->
+    pallas_mesh -> registration order on every platform, and the legacy
+    order index breaks exact prediction ties, so the choice only shifts
+    once calibration says otherwise.  Any cost-model failure degrades to
+    the legacy first-capable rule with a ledger record."""
     order: List[str] = []
     for name in (
         *((_DEFAULT_BACKEND[0],) if _DEFAULT_BACKEND[0] is not None else ()),
@@ -774,17 +795,36 @@ def _choose_backend(spec: GemmSpec) -> _Backend:
         if name not in order:
             order.append(name)
     reasons = []
-    for name in order:
+    capable: List[Tuple[str, int]] = []
+    for idx, name in enumerate(order):
         be = _REGISTRY.get(name)
         if be is None:
             continue
         reason = _check_capabilities(spec, be)
-        if reason is None:
-            return be
-        reasons.append(reason)
-    raise CapabilityError(
-        "no registered backend can execute this spec: " + "; ".join(reasons)
-    )
+        if reason is not None:
+            reasons.append(reason)
+            continue
+        if name == _DEFAULT_BACKEND[0]:
+            return be, None
+        capable.append((name, idx))
+    if not capable:
+        raise CapabilityError(
+            "no registered backend can execute this spec: " + "; ".join(reasons)
+        )
+    if len(capable) == 1:
+        return _REGISTRY[capable[0][0]], None
+    try:
+        from repro.costmodel import choose as _cm_choose
+
+        chosen, dec = _cm_choose.decide_backend(spec, capable)
+        return _REGISTRY[chosen], dec.as_dict()
+    except Exception as e:  # degraded: legacy first-capable
+        _rledger.record(
+            "costmodel.decide_backend",
+            cause=f"{type(e).__name__}: {e}",
+            fallback=capable[0][0],
+        )
+        return _REGISTRY[capable[0][0]], None
 
 
 # Capability-ordered degradation ladder (DESIGN.md §11): when a backend's
@@ -1088,6 +1128,10 @@ class Plan:
     # _chain: backend names still available below the active one.
     guard: Optional[str] = None
     guard_sample: Optional[int] = None
+    # Cost-model decision provenance (DESIGN.md §13): why this backend /
+    # schedule / sharding was picked — per-candidate predicted seconds and
+    # the calibration version.  None when every degree of freedom was pinned.
+    decision: Optional[Dict[str, Any]] = None
     health: List = dataclasses.field(default_factory=list)
     _chain: List[str] = dataclasses.field(default_factory=list, repr=False)
     _active: Optional[str] = dataclasses.field(default=None, repr=False)
@@ -1121,6 +1165,7 @@ class Plan:
             # eff_m in "mkn" folds the batch only when b is 2D; batched_b
             # consumers (roofline) must scale per-element byte counts by batch
             "batched_b": self.spec.batched_b,
+            "repeats": self.spec.repeats,
             "blocks": list(self.blocks) if self.blocks else None,
             "epilogue": {
                 "bias": self.spec.epilogue.bias,
@@ -1140,6 +1185,8 @@ class Plan:
                 "events": [e.as_dict() for e in self.health],
             },
         }
+        if self.decision is not None:
+            d["decision"] = self.decision
         grp = self.spec.group
         if grp is not None:
             ia = jnp.dtype(self.spec.dtype_a).itemsize
@@ -1652,10 +1699,14 @@ def plan(
     collective schedule, and the jitted executor are all fixed here; repeated
     calls return the *identical* Plan object.  An explicit `backend` is
     validated strictly (CapabilityError on mismatch); otherwise the first
-    capable backend is chosen (pinned default → xla → pallas_mesh →
+    capable backend is chosen — the capable set ranked by the cost model
+    (DESIGN.md §13; ties reproduce pinned default → xla → pallas_mesh →
     registration order).  A spec carrying a ShardSpec requires the live
     device `mesh` and returns a ShardedPlan; equal meshes (same devices +
     axis names) key the same cache entry, different meshes plan separately.
+    `mesh=` WITHOUT a ShardSpec auto-shards: the cost model enumerates axis
+    assignments over the live mesh and attaches the cheapest legal
+    ShardSpec (decision provenance in `describe()["decision"]`).
     A spec carrying a GroupSpec returns a GroupedPlan taking (tokens,
     group_offsets, weights) — and, with a ShardSpec too, a
     ShardedGroupedPlan (`expert` schedule).
@@ -1678,20 +1729,19 @@ def plan(
             "spec carries a ShardSpec; pass the device mesh:"
             " plan(spec, mesh=mesh)"
         )
+    shard_decision = None
     if spec.shard is None and mesh is not None:
-        raise ValueError(
-            "mesh= given but spec has no ShardSpec; attach one, e.g."
-            " GemmSpec(..., shard=ShardSpec.from_mesh(mesh, ...))"
-        )
+        spec, shard_decision = _auto_shard(spec, mesh)
     if guard_nonfinite is not None:
         guard_nonfinite = normalize_policy(guard_nonfinite)
+    backend_decision = None
     if backend is not None:
         be = _require_backend(backend)
         reason = _check_capabilities(spec, be)
         if reason is not None:
             raise CapabilityError(reason)
     else:
-        be = _choose_backend(spec)
+        be, backend_decision = _choose_backend(spec)
 
     key = (
         spec, be.name, jax.default_backend(), mesh, guard_nonfinite, guard_sample
@@ -1730,6 +1780,14 @@ def plan(
                 )
             )
     p.health.extend(build_events)
+    if backend_decision is not None or shard_decision is not None:
+        # merge with any schedule decision _build_sharded_plan attached
+        dec = dict(p.decision or {})
+        if backend_decision is not None:
+            dec["backend"] = backend_decision
+        if shard_decision is not None:
+            dec["sharding"] = shard_decision
+        p.decision = dec
     # Backends still available below the one that built — the execution-time
     # degradation ladder (Plan._degrade).
     p._chain = [c.name for c in chain[built_at + 1 :]]
@@ -1737,6 +1795,25 @@ def plan(
     p.guard_sample = guard_sample
     _PLAN_CACHE[key] = p
     return p
+
+
+def _resolve_blocks_via_costmodel(
+    m: int, k: int, n: int, dtype, backend: str, *, symmetry: int = 0
+) -> Tuple[int, int, int]:
+    """Block resolution through the cost model's chooser: IDENTICAL to
+    `autotune.resolve_blocks` (same cache, same analytic ranking) until
+    coefficients are CALIBRATED, when the candidate ranking switches to
+    `costmodel.model.predict_blocks_ms`.  Any chooser failure degrades to
+    the autotuner directly."""
+    try:
+        from repro.costmodel import choose as _cm_choose
+
+        blocks, _ = _cm_choose.choose_blocks(
+            m, k, n, dtype, backend, symmetry=symmetry
+        )
+        return blocks
+    except Exception:
+        return _autotune.resolve_blocks(m, k, n, dtype, backend, symmetry=symmetry)
 
 
 def _grouped_block_m(rpg: int, bm: int) -> int:
@@ -1756,7 +1833,7 @@ def _build_grouped_plan(spec: GemmSpec, be: _Backend) -> GroupedPlan:
     if be.caps.autotune:
         partial = spec.blocks or (None, None, None)
         if None in partial:
-            bm, bn, bk = _autotune.resolve_blocks(
+            bm, bn, bk = _resolve_blocks_via_costmodel(
                 grp.rows_per_group, spec.k, spec.n, spec.acc_dtype, be.name
             )
             blocks = tuple(p or r for p, r in zip(partial, (bm, bn, bk)))
@@ -1811,7 +1888,7 @@ def _build_plan(spec: GemmSpec, be: _Backend) -> Plan:
                 "pallas_mesh_scrambled" if spec.structure == "scrambled" else be.name
             )
             symmetry = 1 if spec.structure == "symmetric" else 0
-            bm, bn, bk = _autotune.resolve_blocks(
+            bm, bn, bk = _resolve_blocks_via_costmodel(
                 spec.eff_m, spec.k, spec.n, acc_dtype, tune_backend, symmetry=symmetry
             )
             blocks = tuple(p or r for p, r in zip(partial, (bm, bn, bk)))
@@ -1876,10 +1953,71 @@ def _build_plan(spec: GemmSpec, be: _Backend) -> Plan:
 # ---------------------------------------------------------------------------
 
 
-def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
+def _legacy_auto_schedule(spec: GemmSpec) -> str:
+    """The pre-cost-model divisibility heuristic — kept as the degraded
+    fallback AND the shape of the model's tie-breaks: a K partition rings
+    (scatter when M divides it), anything else replicates."""
+    shard = spec.shard
+    pk = shard.axis_size(shard.axis_k)
+    if pk > 1:
+        return "reduce_scatter_k" if spec.eff_m % pk == 0 else "ring_k"
+    return "replicated"
+
+
+def _auto_schedule(spec: GemmSpec) -> Tuple[str, Optional[Dict[str, Any]]]:
+    """Resolve schedule='auto' through the cost model (DESIGN.md §13).
+
+    The model legality-trials every schedule with this function's OWN
+    validation (pinned-schedule `_resolve_sharding` calls), so it can never
+    pick an illegal one.  When no candidate is legal the legacy heuristic
+    names the schedule whose validation then raises the precise error the
+    caller always saw; any other cost-model failure degrades to the legacy
+    choice with a ledger record."""
+    try:
+        from repro.costmodel import choose as _cm_choose
+    except Exception:
+        return _legacy_auto_schedule(spec), None
+    try:
+        sched, dec = _cm_choose.decide_schedule(spec)
+        return sched, dec.as_dict()
+    except _cm_choose.NoLegalCandidate:
+        return _legacy_auto_schedule(spec), None
+    except Exception as e:
+        _rledger.record(
+            "costmodel.decide_schedule",
+            cause=f"{type(e).__name__}: {e}",
+            fallback="legacy-heuristic",
+        )
+        return _legacy_auto_schedule(spec), None
+
+
+def _auto_shard(
+    spec: GemmSpec, mesh: Mesh
+) -> Tuple[GemmSpec, Optional[Dict[str, Any]]]:
+    """plan(spec, mesh=...) with NO ShardSpec: let the cost model pick axes
+    AND schedule over the live mesh.  Degraded fallback is the unsharded
+    ShardSpec — correct on any mesh — with a ledger record."""
+    try:
+        from repro.costmodel import choose as _cm_choose
+
+        shard, dec = _cm_choose.decide_sharding(spec, mesh)
+        return dataclasses.replace(spec, shard=shard), dec.as_dict()
+    except Exception as e:
+        _rledger.record(
+            "costmodel.decide_sharding",
+            cause=f"{type(e).__name__}: {e}",
+            fallback="unsharded",
+        )
+        return dataclasses.replace(spec, shard=ShardSpec.unsharded(mesh)), None
+
+
+def _resolve_sharding(
+    spec: GemmSpec,
+) -> Tuple[str, GemmSpec, int, int, Optional[Dict[str, Any]]]:
     """Choose/validate the collective schedule for `spec.shard` and derive
     (schedule, per-shard local spec, bytes_moved per device per call,
-    collective phase count).
+    collective phase count, cost-model decision provenance — None unless
+    schedule='auto' resolved through the model).
 
     The local spec is the SAME GemmSpec type the unsharded planner consumes —
     epilogue stripped (applied post-collective) and accumulation pinned to
@@ -1910,11 +2048,9 @@ def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
     eff_m = spec.eff_m
 
     sched = shard.schedule
+    decision = None
     if sched == "auto":
-        if pk > 1:
-            sched = "reduce_scatter_k" if eff_m % pk == 0 else "ring_k"
-        else:
-            sched = "replicated"
+        sched, decision = _auto_schedule(spec)
     if sched == "expert":
         raise PlanValidationError(
             "schedule 'expert' shards the group dim of a GROUPED spec;"
@@ -2012,10 +2148,12 @@ def _resolve_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
         out_dtype="float32",
         shard=None,
     )
-    return sched, local, bytes_moved, phases
+    return sched, local, bytes_moved, phases, decision
 
 
-def _resolve_grouped_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
+def _resolve_grouped_sharding(
+    spec: GemmSpec,
+) -> Tuple[str, GemmSpec, int, int, Optional[Dict[str, Any]]]:
     """The grouped analogue of `_resolve_sharding`: the only meaningful
     partition is the group (expert) dim over `axis_g` — the `expert`
     schedule.  Tokens/sizes/weights reshard at the shard_map boundary (the
@@ -2061,7 +2199,8 @@ def _resolve_grouped_sharding(spec: GemmSpec) -> Tuple[str, GemmSpec, int, int]:
         phases = pg - 1
     else:
         bytes_moved, phases = 0, 0
-    return ("expert" if pg > 1 else "replicated"), local, bytes_moved, phases
+    # EP has one meaningful partition — no candidate set, no decision record
+    return ("expert" if pg > 1 else "replicated"), local, bytes_moved, phases, None
 
 
 def _grouped_sharded_executor(
@@ -2217,7 +2356,7 @@ def _build_sharded_plan(spec: GemmSpec, be: _Backend, mesh: Mesh) -> ShardedPlan
             f" plan() got a mesh with {live}; rebuild it with"
             f" ShardSpec.from_mesh(mesh, ...)"
         )
-    sched, local_spec, bytes_moved, phases = _resolve_sharding(spec)
+    sched, local_spec, bytes_moved, phases, sched_decision = _resolve_sharding(spec)
     local_plan = plan(local_spec, backend=be.name)
     # allgather_a / reduce_scatter_k run the local kernel once per ring step
     # (p = phases + 1); replicated, ring_k and expert invoke it exactly once.
@@ -2241,6 +2380,8 @@ def _build_sharded_plan(spec: GemmSpec, be: _Backend, mesh: Mesh) -> ShardedPlan
         collective_phases=phases,
         kernel_invocations=invocations,
     )
+    if sched_decision is not None:
+        p.decision = {"schedule": sched_decision}
     executor = (
         _grouped_sharded_executor if spec.group is not None else _sharded_executor
     )

@@ -48,6 +48,7 @@ __all__ = [
     "cache_key",
     "candidate_blocks",
     "default_cache",
+    "measure_best_ms",
     "model_score",
     "resolve_blocks",
     "vmem_bytes",
@@ -395,6 +396,28 @@ def _warm_start(
     return best
 
 
+def measure_best_ms(fn: Callable, *args, warmup: int = 1, reps: int = 3) -> float:
+    """Best-of-`reps` wall time of `fn(*args)` in milliseconds, compile
+    excluded (`warmup` untimed calls first).  Results are blocked on when
+    they expose `block_until_ready` — the shared timing utility behind the
+    autotuner's candidate search and `costmodel/calibrate.py`'s probes."""
+
+    def _run():
+        out = fn(*args)
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        return out
+
+    for _ in range(warmup):
+        _run()
+    best = float("inf")
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        _run()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
 def _default_measure(
     m: int, k: int, n: int, dtype, backend: str, blocks: Blocks
 ) -> float:
@@ -412,13 +435,7 @@ def _default_measure(
         scramble_out=backend == "pallas_mesh_scrambled",
         interpret=jax.default_backend() != "tpu",
     )
-    mesh_matmul_pallas(a, b, **kw).block_until_ready()  # compile/warm
-    best = float("inf")
-    for _ in range(3):
-        t0 = time.perf_counter()
-        mesh_matmul_pallas(a, b, **kw).block_until_ready()
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e3
+    return measure_best_ms(lambda: mesh_matmul_pallas(a, b, **kw))
 
 
 def _scramble_compatible(m: int, n: int, blocks: Blocks) -> bool:
@@ -443,6 +460,7 @@ def autotune(
     measure: Optional[Callable[..., float]] = None,
     max_timed: int = 8,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    scorer: Optional[Callable[[Blocks], float]] = None,
 ) -> Blocks:
     """Resolve the block triple for an (M, K, N) GEMM.  Cache hit => no search.
 
@@ -454,6 +472,11 @@ def autotune(
     The cache key is shape-level only, so candidate pruning budgets for the
     worst-case epilogue working set (bias + residual tiles) — a cached entry
     is valid for every epilogue configuration of that shape.
+
+    `scorer` (optional) replaces the analytic `model_score` ranking with an
+    external cost in milliseconds (LOWER is better) — the hook
+    `costmodel/choose.py` uses to rank candidates by calibrated-coefficient
+    predictions while the timed search stays the tie-breaker on TPU.
     """
     platform = platform or jax.default_backend()
     cache = cache or default_cache()
@@ -480,7 +503,10 @@ def autotune(
         cands = [c for c in cands if _scramble_compatible(m, n, c)] or [
             (_LANE, _LANE, _LANE)  # dispatch raises its own clear error if
         ]  # even the default can't tile M/N squarely
-    cands.sort(key=lambda blk: model_score(m, k, n, blk, dtype), reverse=True)
+    if scorer is not None:
+        cands.sort(key=scorer)
+    else:
+        cands.sort(key=lambda blk: model_score(m, k, n, blk, dtype), reverse=True)
 
     if mode == "model":
         best, ms, source = cands[0], None, "model"

@@ -12,7 +12,15 @@ rules, config override, remat) tuple.  Every variant is lowered + compiled +
 probe-corrected exactly like the baseline sweep, so before/after numbers are
 apples-to-apples.
 
+A second, MEASURED lane hillclimbs the GEMM layer itself: `--gemm` times
+the `GEMM_VARIANTS` through the plan/execute API (`kernels.api.plan` + the
+autotuner's `measure_best_ms` — not the legacy ops entry points) and writes
+each measurement in the cost-model calibration record format
+({"terms", "ms", "source"}), so `costmodel.calibrate.ingest` folds them
+into the coefficient fit (`--ingest` does it in the same run).
+
   PYTHONPATH=src python -m repro.launch.hillclimb [--cell A|B|C|D] [--variant NAME]
+  PYTHONPATH=src python -m repro.launch.hillclimb --gemm [--ingest]
 """
 
 import argparse
@@ -156,6 +164,77 @@ CELLS: Dict[str, Dict[str, Any]] = {
 }
 
 
+# GEMM-layer variants measured through plan/execute: shapes spread to
+# separate the FLOP term from fixed overhead, plus the paper regimes the
+# cost model prices differently (symmetric early readout, repeated products).
+GEMM_VARIANTS: Dict[str, Dict[str, Any]] = {
+    "G0_tiny": {"mkn": (64, 64, 64)},
+    "G1_cube256": {"mkn": (256, 256, 256)},
+    "G2_cube512": {"mkn": (512, 512, 512)},
+    "G3_wide_n": {"mkn": (128, 256, 1024)},
+    "G4_symmetric": {"mkn": (256, 256, 256), "structure": "symmetric"},
+    "G5_repeats8": {"mkn": (256, 256, 256), "repeats": 8},
+}
+
+
+def run_gemm_variant(
+    name: str,
+    out_dir: str = "artifacts/hillclimb",
+    *,
+    backend: Optional[str] = None,
+    reps: int = 3,
+):
+    """Time one GEMM variant through the plan/execute API and write the
+    measurement as a calibration record (`costmodel.calibrate` format).
+
+    `repeats=r` variants execute the plan r times back to back against the
+    same operands and record the per-product mean, matching the cost
+    model's amortized per-call prediction."""
+    import jax.numpy as jnp
+
+    from repro.costmodel import current_coefficients, predict, terms_from_describe
+    from repro.kernels import api
+    from repro.kernels.autotune import measure_best_ms
+
+    v = GEMM_VARIANTS[name]
+    m, k, n = v["mkn"]
+    repeats = int(v.get("repeats", 1))
+    spec = api.GemmSpec(
+        m=m, k=k, n=n, structure=v.get("structure", "general"), repeats=repeats
+    )
+    p = api.plan(spec, backend=backend)
+    a = jnp.ones((m, k), jnp.float32)
+    b = jnp.ones((k, n), jnp.float32)
+    if repeats > 1:
+
+        def run_repeated(a_, b_, bias_, res_):
+            out = None
+            for _ in range(repeats):
+                out = p.executor(a_, b_, bias_, res_)
+            return out
+
+        ms = measure_best_ms(run_repeated, a, b, None, None, reps=reps) / repeats
+    else:
+        ms = measure_best_ms(p.executor, a, b, None, None, reps=reps)
+    terms = terms_from_describe(p.describe())
+    rec = {
+        "terms": terms,
+        "ms": ms,
+        "source": "hillclimb",
+        "key": f"{name}|{p.backend}",
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"gemm__{name}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    pred = predict(terms, current_coefficients())["total_s"] * 1e3
+    print(
+        f"{name:16s} {m}x{k}x{n} backend={p.backend:12s} "
+        f"measured={ms:9.3f}ms predicted={pred:9.3f}ms "
+        f"ratio={ms / pred if pred else float('inf'):6.2f}x"
+    )
+    return rec
+
+
 def run_variant(cell: str, name: str, out_dir: str = "artifacts/hillclimb"):
     spec = CELLS[cell]
     v = spec["variants"][name]
@@ -191,7 +270,29 @@ def main() -> None:
     ap.add_argument("--cell", default=None, choices=sorted(CELLS))
     ap.add_argument("--variant", default=None)
     ap.add_argument("--out", default="artifacts/hillclimb")
+    ap.add_argument(
+        "--gemm", action="store_true",
+        help="run the measured GEMM variants (calibration-record output)",
+    )
+    ap.add_argument(
+        "--ingest", action="store_true",
+        help="fold the GEMM measurements into the costmodel calibration file",
+    )
     args = ap.parse_args()
+    if args.gemm:
+        records = []
+        names = [args.variant] if args.variant else list(GEMM_VARIANTS)
+        for name in names:
+            try:
+                records.append(run_gemm_variant(name, args.out))
+            except Exception as e:
+                print(f"{name:16s} FAILED: {type(e).__name__}: {e}")
+        if args.ingest and records:
+            from repro.costmodel import ingest
+
+            added = ingest(records)
+            print(f"ingested {added} records into the calibration file")
+        return
     cells = [args.cell] if args.cell else sorted(CELLS)
     for cell in cells:
         spec = CELLS[cell]

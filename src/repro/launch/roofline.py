@@ -119,54 +119,18 @@ def analyze_plan(desc: Dict[str, Any]) -> Dict[str, Any]:
     weight slab streams — plus the dispatch (scatter/gather routing) bytes;
     unknown record shapes degrade to the plain-GEMM arithmetic instead of
     raising.
-    """
-    import math as _math
 
-    import numpy as _np
+    The byte/FLOP arithmetic lives in `costmodel.model.terms_from_describe`
+    (the machine-usable `terms` dict is echoed back in the result for the
+    cost model and calibration); this function adds the fixed TPU v5e
+    constants, dominant-term classification, and tuning hints.
+    """
+    from repro.costmodel.model import terms_from_describe
 
     sh = desc.get("sharding") or {}
     grp = desc.get("grouped") or {}
-    flops = sh.get("per_shard_flops", desc["flops"])
-    if "per_shard_mkn" in sh:
-        m, k, n = sh["per_shard_mkn"]
-        # batched_b local specs keep their batch dims out of eff_m
-        nb = _math.prod(sh.get("per_shard_batch") or [1])
-    else:
-        m, k, n = (int(x) for x in desc["mkn"].split("x"))
-        # "mkn" folds batch into M only for 2D b; batched_b products stream
-        # per-element A/B/C, so scale bytes to match the batch-inclusive FLOPs
-        nb = _math.prod(desc.get("batch") or [1]) if desc.get("batched_b") else 1
-    dt_a, dt_b = desc.get("dtypes", ["float32", "float32"])
-    # Ring schedules re-invoke the per-shard kernel once per step: the device
-    # streams `inv` A chunks and writes `inv` output tiles per call.
-    inv = sh.get("kernel_invocations", 1)
-    if grp:
-        # Grouped: M is the total row bound (rows stream once), but the
-        # weight term is per GROUP — every (K, N) slab streams — and the
-        # sort/scatter/gather routing traffic rides the memory term too.
-        n_groups = grp.get("num_groups", 1)
-        dispatch_bytes = grp.get("dispatch_bytes", 0)
-        if sh:
-            # expert schedule: `m` above is already the per-shard row count
-            # (per_shard_mkn); scale group count and dispatch traffic to the
-            # per-device share using the group axis size from the record
-            mesh_sizes = {nm: s for nm, s in sh.get("mesh", [])}
-            pg = mesh_sizes.get((sh.get("axes") or {}).get("g"), 1) or 1
-            n_groups = max(1, n_groups // pg)
-            dispatch_bytes //= pg
-        hbm_bytes = (
-            m * k * _np.dtype(dt_a).itemsize
-            + n_groups * k * n * _np.dtype(dt_b).itemsize
-            + m * n * _np.dtype(desc["out_dtype"]).itemsize
-            + dispatch_bytes
-        )
-    else:
-        hbm_bytes = nb * (
-            inv * m * k * _np.dtype(dt_a).itemsize
-            + k * n * _np.dtype(dt_b).itemsize
-            + inv * m * n * _np.dtype(desc["out_dtype"]).itemsize
-        )
-    coll_bytes = sh.get("bytes_moved", 0)
+    t = terms_from_describe(desc)
+    flops, hbm_bytes, coll_bytes = t["flops"], t["hbm_bytes"], t["collective_bytes"]
     terms = {
         "compute": flops / PEAK_FLOPS,
         "memory": hbm_bytes / HBM_BW,
@@ -180,6 +144,7 @@ def analyze_plan(desc: Dict[str, Any]) -> Dict[str, Any]:
         "per_shard_flops": flops,
         "hbm_bytes": hbm_bytes,
         "collective_bytes": coll_bytes,
+        "terms": t,
         "t_compute_s": terms["compute"],
         "t_memory_s": terms["memory"],
         "t_collective_s": terms["collective"],

@@ -581,6 +581,16 @@ class ContinuousBatchingServer:
         the decode-step jit program)."""
         from repro.kernels import api
 
+        # Pre-resolve the cost model's coefficients (one calibration-file
+        # read, memoized) so plan-time auto decisions inside a serving tick
+        # never touch the filesystem (DESIGN.md §13).
+        try:
+            from repro.costmodel import current_coefficients
+
+            current_coefficients()
+        except Exception:
+            pass  # planner degrades to defaults on its own
+
         a = jnp.ones((8, 8), jnp.float32)
         canary = api.plan(
             api.GemmSpec.from_operands(a, a, blocks=(8, 8, 8)),

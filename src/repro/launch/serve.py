@@ -96,7 +96,16 @@ def report_plan_cache(prefix: str = "[serve]") -> dict:
     roofline communication cost derived from bytes-moved provenance;
     grouped plans (MoE expert shapes) report groups x rows-per-group,
     per-group FLOPs, and dispatch (routing) bytes.
+
+    Cost-model provenance (DESIGN.md §13) rides along: every entry prints
+    its predicted milliseconds under the current coefficients — plus the
+    measured milliseconds when the calibration file holds a record for the
+    same shape/backend — and entries whose backend/schedule/sharding the
+    cost model chose print the decision (chosen candidate + how many were
+    ranked + calibration source).
     """
+    from repro.costmodel import current_coefficients, predict, terms_from_describe
+    from repro.costmodel.calibrate import default_cache
     from repro.launch.roofline import analyze_plan
 
     info = kernel_api.plan_cache_info()
@@ -104,6 +113,14 @@ def report_plan_cache(prefix: str = "[serve]") -> dict:
         f"{prefix} GEMM plan cache: {info['size']} plans, "
         f"{info['hits']} hits, {info['misses']} misses"
     )
+    coeffs = current_coefficients()
+    try:
+        measured_ms = {
+            rec.get("key"): rec["ms"]
+            for rec in default_cache().records(coeffs.platform)
+        }
+    except Exception:  # a broken calibration file must not break the report
+        measured_ms = {}
     for p in info["plans"]:
         blocks = "x".join(map(str, p["blocks"])) if p["blocks"] else "-"
         epi = p["epilogue"]
@@ -130,10 +147,29 @@ def report_plan_cache(prefix: str = "[serve]") -> dict:
             if grp
             else "-"
         )
+        pred_ms = predict(terms_from_describe(p), coeffs)["total_s"] * 1e3
+        meas = measured_ms.get(f"{p['mkn']}|{p['backend']}")
+        cost_s = f"pred={pred_ms:.3f}ms"
+        if meas is not None:
+            cost_s += f" meas={meas:.3f}ms"
+        dec = p.get("decision") or {}
+        dec_bits = []
+        for kind in ("backend", "sharding", "schedule"):
+            d = dec.get(kind)
+            if d:
+                dec_bits.append(
+                    f"{kind}:{d['chosen']}/{len(d.get('candidates', []))}cand"
+                )
+        if dec_bits:
+            cal = next(iter(dec.values())).get("calibration", {})
+            dec_s = " ".join(dec_bits) + f" [{cal.get('source', '?')}]"
+        else:
+            dec_s = "-"
         print(
             f"{prefix}   {p['backend']:11s} {p['structure']:9s} "
             f"{p['mkn']:>18s} batch={p['batch'] or '-'} blocks={blocks} "
-            f"epi={epi_s:12s} flops={p['flops']:.2e} grp={grp_s} shard={shard_s}"
+            f"epi={epi_s:12s} flops={p['flops']:.2e} grp={grp_s} shard={shard_s} "
+            f"{cost_s} decision={dec_s}"
         )
     return info
 

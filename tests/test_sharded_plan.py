@@ -119,8 +119,10 @@ def test_plan_requires_matching_mesh_and_shardspec():
     spec = GemmSpec(m=B, k=B, n=B, shard=ShardSpec.unsharded(mesh))
     with pytest.raises(ValueError, match="pass the device mesh"):
         api.plan(spec)
-    with pytest.raises(ValueError, match="spec has no ShardSpec"):
-        api.plan(GemmSpec(m=B, k=B, n=B), mesh=mesh)
+    # mesh= WITHOUT a ShardSpec auto-shards (cost model) instead of raising
+    auto = api.plan(GemmSpec(m=B, k=B, n=B), mesh=mesh)
+    assert isinstance(auto, ShardedPlan) and auto.spec.shard is not None
+    assert auto.describe()["decision"]["sharding"]["chosen"]
     other = make_local_mesh((1,), ("model",))
     with pytest.raises(ValueError, match="built for mesh axes"):
         api.plan(spec, mesh=other)
@@ -211,14 +213,15 @@ def test_schedule_resolution_and_bytes_moved_model():
     without devices."""
     axes = (("x", 4),)
     spec_k = GemmSpec(m=16, k=32, n=8, shard=ShardSpec(axes, axis_k="x"))
-    sched, local, bytes_moved, phases = api._resolve_sharding(spec_k)
+    sched, local, bytes_moved, phases, decision = api._resolve_sharding(spec_k)
     assert sched == "reduce_scatter_k"  # auto: M % 4 == 0
+    assert decision is not None and decision["chosen"] == "reduce_scatter_k"
     assert (local.m, local.k, local.n) == (4, 8, 8)
     assert local.epilogue.is_identity and local.shard is None
     assert bytes_moved == 3 * 4 * 8 * 4 and phases == 3
 
     spec_ring = GemmSpec(m=6, k=32, n=8, shard=ShardSpec(axes, axis_k="x"))
-    sched, local, bytes_moved, _ = api._resolve_sharding(spec_ring)
+    sched, local, bytes_moved, _, _ = api._resolve_sharding(spec_ring)
     assert sched == "ring_k"  # auto: M=6 not divisible by 4
     assert (local.m, local.k) == (6, 8) and bytes_moved == 3 * 6 * 8 * 4
 
@@ -227,7 +230,7 @@ def test_schedule_resolution_and_bytes_moved_model():
         shard=ShardSpec(axes, axis_m="x", schedule="allgather_a"),
         dtype_a="bfloat16",
     )
-    sched, local, bytes_moved, _ = api._resolve_sharding(spec_ag)
+    sched, local, bytes_moved, _, _ = api._resolve_sharding(spec_ag)
     assert sched == "allgather_a" and local.m == 4
     assert bytes_moved == 3 * 4 * 32 * 2  # bf16 A chunks hop the ring
 
