@@ -26,6 +26,13 @@ _PROG = textwrap.dedent(
     from repro.costmodel import choose as _choose
     from repro.kernels import api
     from repro.launch.mesh import make_local_mesh
+    from repro import obs
+
+    # Tracing + bridge live for the whole bench: every eager p(a, b) below
+    # emits a plan.execute span that the bridge converts into a calibration
+    # record — this is the multi-device lane ROADMAP 2(a) was missing.
+    obs.enable()
+    obs.install()
 
     M = K = N = 512
     STEPS = 10
@@ -51,13 +58,20 @@ _PROG = textwrap.dedent(
             out = p(a, b)
         out.block_until_ready()
         ms = (time.perf_counter() - t0) / STEPS * 1e3
-        pred = predict(terms_from_describe(p.describe()), coeffs)
+        terms = terms_from_describe(p.describe())
+        pred = predict(terms, coeffs)
         rows.append({
             "schedule": name,
             "predicted_ms": round(pred["total_s"] * 1e3, 4),
             "measured_ms": round(ms, 3),
             "ratio": round(ms / (pred["total_s"] * 1e3), 2),
         })
+        # the bench's own blocked-and-timed number is the highest-quality
+        # sample; submit it alongside the bridge's per-execute spans
+        obs.submit_calibration([{
+            "terms": terms, "ms": ms, "source": "bench_costmodel",
+            "key": f"{M}x{K}x{N}|" + terms.get("backend", "?"),
+        }])
 
     # ranking accuracy: does the model ORDER the schedules like the clock?
     by_pred = sorted(rows, key=lambda r: r["predicted_ms"])
@@ -91,8 +105,24 @@ _PROG = textwrap.dedent(
         "rs_before_ag": rs < ag,
         "calibration": d["calibration"],
     }
+    # fold the buffered measurements (bench submissions + bridged
+    # plan.execute spans) into the scratch calibration cache and refit:
+    # link_bytes_per_s / phase_latency_s now come from THIS host's
+    # multi-device timings, not shipped defaults
+    pre = current_coefficients()
+    ingested = obs.flush_calibration()
+    post = current_coefficients()
+    calibration = {
+        "ingested": ingested,
+        "source": post.source,
+        "link_bytes_per_s": post.link_bytes_per_s,
+        "phase_latency_s": post.phase_latency_s,
+        "link_moved": post.link_bytes_per_s != pre.link_bytes_per_s,
+        "spans": obs.stats()["finished"],
+    }
     print("COSTMODEL_JSON " + json.dumps({
         "mkn": f"{M}x{K}x{N}", "rows": rows, "ranking": ranking, "auto": auto,
+        "calibration": calibration,
     }))
     """
 )
@@ -142,6 +172,13 @@ def run(as_dict: bool = False):
         f" ag_rank={auto['rank_allgather_a']}"
         f" source={auto['calibration']['source']}"
     )
+    cal = doc.get("calibration", {})
+    if cal:
+        print(
+            f"calibration: ingested={cal['ingested']} source={cal['source']}"
+            f" link_bytes_per_s={cal['link_bytes_per_s']:.3g}"
+            f" link_moved={cal['link_moved']} spans={cal['spans']}"
+        )
     return doc if as_dict else True
 
 

@@ -11,6 +11,7 @@ Sections:
   moe          grouped-GEMM expert dispatch vs one-hot einsum (ms + bytes)
   sharded      ShardedPlan collective schedules: bytes-moved + step time
   costmodel    cost-model predicted vs measured ms + schedule-ranking accuracy
+  obs          tracing overhead: disabled <2% contract + enabled spans/s
   distributed  Cannon phases, pipeline bubbles, ring-overlap wall-time
   serve        continuous-batching Poisson load: throughput + p50/p99 latency
   train        short real training run (loss trajectory) on the demo config
@@ -29,6 +30,7 @@ from benchmarks import (
     bench_distributed,
     bench_kernels,
     bench_moe,
+    bench_obs,
     bench_roofline,
     bench_scramble,
     bench_serve,
@@ -67,6 +69,7 @@ SECTIONS = {
     "moe": bench_moe.run,
     "sharded": bench_sharded.run,
     "costmodel": bench_costmodel.run,
+    "obs": bench_obs.run,
     "distributed": bench_distributed.run,
     "serve": bench_serve.run,
     "train": bench_train,
@@ -110,7 +113,7 @@ def main() -> None:
     if args.json and "kernels" in names:
         # the kernels --json branch already runs the dispatch/moe/sharded/
         # serve microbenches for its payload — don't time the same calls twice
-        for ride_along in ("dispatch", "moe", "sharded", "costmodel", "serve"):
+        for ride_along in ("dispatch", "moe", "sharded", "costmodel", "obs", "serve"):
             if ride_along in names:
                 names.remove(ride_along)
     failed = []
@@ -128,6 +131,7 @@ def main() -> None:
                 payload["moe"] = bench_moe.run(as_dict=True)
                 payload["sharded"] = bench_sharded.run(as_dict=True)
                 payload["costmodel"] = bench_costmodel.run(as_dict=True)
+                payload["obs"] = bench_obs.run(as_dict=True)
                 payload["serve"] = bench_serve.run(as_dict=True)
                 _write_kernels_json(payload, time.perf_counter() - t0, args.json_path)
             else:

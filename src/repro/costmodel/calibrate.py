@@ -39,6 +39,7 @@ from repro.costmodel.model import (
     predict,
     terms_from_describe,
 )
+from repro.obs import trace as _obs
 from repro.resilience import faults as _faults
 from repro.resilience import ledger as _rledger
 from repro.resilience.policy import retry_call as _retry_call
@@ -290,7 +291,9 @@ def run_probes(
             p = api.plan(spec, backend=backend)
             a = jnp.ones((m, k), jnp.float32)
             b = jnp.ones((k, n), jnp.float32)
-            ms = measure_best_ms(p.executor, a, b, None, None, reps=reps)
+            with _obs.span("calibrate.probe", mkn=f"{m}x{k}x{n}",
+                           backend=p.backend):
+                ms = measure_best_ms(p.executor, a, b, None, None, reps=reps)
         except Exception as e:
             _rledger.record(
                 "costmodel.probe",
@@ -403,13 +406,17 @@ def ingest(
 
     platform = platform or jax.default_backend()
     cache = cache or default_cache()
-    added = cache.add_records(platform, records)
-    if added and refit:
-        coeffs = fit_coefficients(cache.records(platform), platform=platform)
-        cache.set_coefficients(coeffs)
-        clear_coefficients_memo()
-    if persist:
-        cache.save()
+    with _obs.span("calibrate.ingest", n=len(records), platform=platform) as sp:
+        added = cache.add_records(platform, records)
+        if added and refit:
+            coeffs = fit_coefficients(cache.records(platform), platform=platform)
+            cache.set_coefficients(coeffs)
+            clear_coefficients_memo()
+        # `added == 0` means nothing changed (all records invalid or empty
+        # batch) — skip the save so a no-op flush never creates a cache file
+        if persist and added:
+            cache.save()
+        sp.set("added", added)
     return added
 
 

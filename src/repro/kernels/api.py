@@ -71,6 +71,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.kernels import autotune as _autotune
 from repro.kernels import ref
 from repro.kernels.grouped import grouped_mesh_matmul_pallas
+from repro.obs import trace as _obs
 from repro.resilience import faults as _faults
 from repro.resilience import ledger as _rledger
 from repro.resilience.policy import (
@@ -1278,7 +1279,42 @@ class Plan:
             f" fallback chain is exhausted for this spec"
         ) from err
 
+    def _obs_attrs(self) -> Dict[str, Any]:
+        """Span attributes for plan.execute (DESIGN.md §14), computed once
+        per plan: backend/blocks/schedule provenance plus the cost-model
+        `terms` the obs bridge converts into calibration records.  Cached on
+        the instance — the enabled hot path pays one dict splat, not a
+        describe() walk."""
+        at = getattr(self, "_obs_attrs_cache", None)
+        if at is None:
+            spec = self.spec
+            at = {
+                "backend": self.active_backend,
+                "structure": spec.structure,
+                "mkn": f"{spec.eff_m}x{spec.k}x{spec.n}",
+                "key": f"{spec.eff_m}x{spec.k}x{spec.n}|{self.backend}",
+                "blocks": list(self.blocks) if self.blocks else None,
+                "schedule": getattr(self, "schedule", None),
+            }
+            try:
+                from repro.costmodel.model import terms_from_describe
+
+                at["terms"] = terms_from_describe(self.describe())
+            except Exception:
+                pass  # spans still carry provenance without cost terms
+            self._obs_attrs_cache = at
+        return at
+
     def _execute(self, args: tuple) -> jax.Array:
+        # Disabled tracing costs ONE attribute check here (the dispatch
+        # microbench rides this path); the span itself is tracer-aware, so
+        # a plan called inside an enclosing jit trace records nothing.
+        if _obs._STATE.enabled:
+            with _obs.span("plan.execute", **self._obs_attrs()):
+                return self._execute_impl(args)
+        return self._execute_impl(args)
+
+    def _execute_impl(self, args: tuple) -> jax.Array:
         try:
             _faults.check("plan.execute", backend=self.active_backend)
             out = self._fn(*args)
@@ -1756,29 +1792,40 @@ def plan(
     build_events: List[Any] = []
     p = None
     built_at = 0
-    for i, cand in enumerate(chain):
-        try:
-            _faults.check("plan.build", backend=cand.name)
-            p = (
-                _build_plan(spec, cand)
-                if mesh is None
-                else _build_sharded_plan(spec, cand, mesh)
-            )
-            built_at = i
-            break
-        except (PlanValidationError, CapabilityError):
-            raise
-        except Exception as e:
-            if i + 1 >= len(chain):
-                raise
-            build_events.append(
-                _rledger.record(
-                    "plan.build",
-                    cause=f"{type(e).__name__}: {e}",
-                    fallback=chain[i + 1].name,
-                    backend=cand.name,
+    with _obs.span(
+        "plan.build",
+        backend=be.name,
+        structure=spec.structure,
+        mkn=f"{spec.eff_m}x{spec.k}x{spec.n}",
+        sharded=mesh is not None,
+    ) as _bsp:
+        for i, cand in enumerate(chain):
+            try:
+                _faults.check("plan.build", backend=cand.name)
+                p = (
+                    _build_plan(spec, cand)
+                    if mesh is None
+                    else _build_sharded_plan(spec, cand, mesh)
                 )
-            )
+                built_at = i
+                break
+            except (PlanValidationError, CapabilityError):
+                raise
+            except Exception as e:
+                if i + 1 >= len(chain):
+                    raise
+                build_events.append(
+                    _rledger.record(
+                        "plan.build",
+                        cause=f"{type(e).__name__}: {e}",
+                        fallback=chain[i + 1].name,
+                        backend=cand.name,
+                    )
+                )
+        _bsp.set("built_backend", chain[built_at].name)
+        _bsp.set("blocks", list(p.blocks) if p.blocks else None)
+        if getattr(p, "schedule", None) is not None:
+            _bsp.set("schedule", p.schedule)
     p.health.extend(build_events)
     if backend_decision is not None or shard_decision is not None:
         # merge with any schedule decision _build_sharded_plan attached

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as _obs
 from repro.resilience import faults as _faults
 from repro.resilience import ledger as _rledger
 from repro.resilience.policy import retry_call as _retry_call
@@ -526,7 +527,9 @@ def autotune(
             # the search degrades toward the analytic model instead of
             # crashing plan construction.
             try:
-                timed.append((measure(m, k, n, dtype, backend, blk), blk))
+                with _obs.span("autotune.measure", key=key, blocks=list(blk)):
+                    cand_ms = measure(m, k, n, dtype, backend, blk)
+                timed.append((cand_ms, blk))
             except Exception as e:
                 failed += 1
                 _rledger.record(

@@ -59,6 +59,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import ShardCtx
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _obs
 from repro.resilience import faults, ledger
 
 __all__ = [
@@ -215,6 +217,25 @@ class ContinuousBatchingServer:
             "served": 0, "shed": 0, "timeout": 0, "preempted": 0,
             "ticks": 0, "skipped_ticks": 0, "decode_tokens": 0,
         }
+        # Obs instruments (DESIGN.md §14): the typed, label-aware mirror of
+        # `self.counters` — process-global (labels aggregate across server
+        # instances) where the dict above stays per-instance for tests.
+        self._m_requests = _metrics.counter(
+            "serve_requests_total", "request outcomes by status",
+            labels=("status",),
+        )
+        self._m_admitted = _metrics.counter(
+            "serve_admitted_total", "requests admitted into decode slots")
+        self._m_ticks = _metrics.counter(
+            "serve_ticks_total", "scheduler ticks by outcome",
+            labels=("outcome",),
+        )
+        self._m_tokens = _metrics.counter(
+            "serve_decode_tokens_total", "tokens produced by decode ticks")
+        self._m_ttft = _metrics.histogram(
+            "serve_ttft_seconds", "submission -> first token latency")
+        self._m_tpot = _metrics.histogram(
+            "serve_tpot_seconds", "per-tick decode wall time (time per token)")
 
         if self._paged:
             self.alloc = PageAllocator(cfg.num_pages)
@@ -335,6 +356,7 @@ class ContinuousBatchingServer:
         key = {"ok": "served", "shed": "shed", "timeout": "timeout",
                "preempted": "preempted"}[status]
         self.counters[key] += 1
+        self._m_requests.inc(status=key)
 
     def _shed(self, req: Request, reason: str, *, submitted_tick: int,
               submitted_at: float) -> None:
@@ -377,22 +399,29 @@ class ContinuousBatchingServer:
         """One scheduler tick: expire, admit, grow, decode, retire."""
         self._tick += 1
         self.counters["ticks"] += 1
-        try:
-            faults.check("serve.step", tick=self._tick)
-        except Exception as e:  # injected: skip the tick, keep the server
-            ledger.record(
-                "serve.step",
-                cause=f"{type(e).__name__}: {e}",
-                fallback="skip_tick",
-                tick=self._tick,
-            )
-            self.counters["skipped_ticks"] += 1
-            return
+        # The per-tick span nests everything the tick does (admission
+        # prefills, the decode step) and costs one attribute check when
+        # tracing is off; exports flush at drain/exit, never here.
+        with _obs.span("serve.tick", tick=self._tick,
+                       active=len(self._active), queued=len(self._queue)):
+            try:
+                faults.check("serve.step", tick=self._tick)
+            except Exception as e:  # injected: skip the tick, keep the server
+                ledger.record(
+                    "serve.step",
+                    cause=f"{type(e).__name__}: {e}",
+                    fallback="skip_tick",
+                    tick=self._tick,
+                )
+                self.counters["skipped_ticks"] += 1
+                self._m_ticks.inc(outcome="skipped")
+                return
+            self._m_ticks.inc(outcome="ok")
 
-        self._expire_deadlines()
-        self._admit()
-        self._ensure_pages()
-        self._decode_tick()
+            self._expire_deadlines()
+            self._admit()
+            self._ensure_pages()
+            self._decode_tick()
 
     def _expire_deadlines(self) -> None:
         for seq in list(self._active):
@@ -450,7 +479,11 @@ class ContinuousBatchingServer:
 
             self._queue.pop(0)
             slot = self._free_slots.pop()
-            first_tok, state = self._run_prefill(req)
+            with _obs.span("serve.prefill", rid=req.rid, tokens=prefill_len):
+                first_tok, state = self._run_prefill(req)
+            self._m_admitted.inc()
+            # TTFT: submission -> first token (prefill emits it greedily).
+            self._m_ttft.observe(time.monotonic() - submitted_at)
             if self._paged:
                 self.pools = self._scatter(
                     self.pools, state, jnp.asarray(pages, jnp.int32)
@@ -544,26 +577,33 @@ class ContinuousBatchingServer:
         for seq in ready:
             tokens[seq.slot, 0] = seq.tokens[-1]
             positions[seq.slot] = seq.pos
-        if self._paged:
-            tables = np.zeros((s_max, self.cfg.max_pages_per_seq), np.int32)
-            for seq in ready:
-                tables[seq.slot, : len(seq.pages)] = seq.pages
-            nxt, self.pools = self._decode(
-                self.params,
-                jnp.asarray(tokens),
-                self.pools,
-                jnp.asarray(tables),
-                jnp.asarray(positions),
-            )
-        else:
-            nxt, self.state = self._decode(
-                self.params, jnp.asarray(tokens), self.state
-            )
-        nxt = np.asarray(nxt)
+        # The decode span covers the jitted step AND the host sync
+        # (np.asarray blocks), so its duration is the honest per-tick
+        # decode wall time — the same number the tpot histogram records.
+        t0 = time.monotonic()
+        with _obs.span("serve.decode", slots=len(ready), tick=self._tick):
+            if self._paged:
+                tables = np.zeros((s_max, self.cfg.max_pages_per_seq), np.int32)
+                for seq in ready:
+                    tables[seq.slot, : len(seq.pages)] = seq.pages
+                nxt, self.pools = self._decode(
+                    self.params,
+                    jnp.asarray(tokens),
+                    self.pools,
+                    jnp.asarray(tables),
+                    jnp.asarray(positions),
+                )
+            else:
+                nxt, self.state = self._decode(
+                    self.params, jnp.asarray(tokens), self.state
+                )
+            nxt = np.asarray(nxt)
+        self._m_tpot.observe(time.monotonic() - t0)
         for seq in ready:
             seq.tokens.append(int(nxt[seq.slot]))
             seq.pos += 1
             self.counters["decode_tokens"] += 1
+            self._m_tokens.inc()
             if len(seq.tokens) >= seq.req.max_new_tokens:
                 self._evict(seq, "ok", "")
 
@@ -597,6 +637,10 @@ class ContinuousBatchingServer:
             guard_nonfinite="zero_and_record",
         )
         canary(a, a)
+        # Second execution is compile-free: when tracing is on, its
+        # plan.execute span is the warm sample the obs bridge feeds to
+        # cost-model calibration (the cold first call is discarded).
+        jax.block_until_ready(canary(a, a))
 
         for t in self.cfg.warmup_prompt_lens:
             dummy = Request(rid=f"__warmup_{t}", prompt=np.zeros(t, np.int32),
@@ -623,6 +667,13 @@ class ContinuousBatchingServer:
             ticks += 1
             if ticks > max_ticks:
                 raise RuntimeError(f"drain exceeded {max_ticks} ticks")
+        # Drain is the scheduler's I/O point (DESIGN.md §14): ticks never
+        # touch the filesystem, so buffered span->calibration records are
+        # folded into the cost-model cache here, after the loop empties.
+        from repro.obs import bridge as _bridge
+
+        if _bridge.installed():
+            _bridge.flush_calibration()
 
     def run(self, requests: Sequence[Request]) -> Dict[str, RequestResult]:
         """Submit `requests` at their arrival ticks, drive to completion."""

@@ -38,6 +38,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.kernels import api as kernel_api
 from repro.models import ShardCtx, get_model
+from repro.obs import trace as _obs
 from repro.resilience import faults as _faults
 from repro.resilience import ledger as _rledger
 from repro.train.train_step import make_prefill_step, make_serve_step
@@ -121,6 +122,14 @@ def report_plan_cache(prefix: str = "[serve]") -> dict:
         }
     except Exception:  # a broken calibration file must not break the report
         measured_ms = {}
+    # Observed execute latencies from the tracing ring, keyed the same way
+    # as the calibration cache ("MxKxN|backend") so each plan row can show
+    # predicted vs actually-traced milliseconds side by side (DESIGN.md §14).
+    obs_ms: dict = {}
+    for sp in _obs.spans("plan.execute"):
+        k = sp.attrs.get("key")
+        if k:
+            obs_ms.setdefault(k, []).append(sp.duration_s * 1e3)
     for p in info["plans"]:
         blocks = "x".join(map(str, p["blocks"])) if p["blocks"] else "-"
         epi = p["epilogue"]
@@ -152,6 +161,11 @@ def report_plan_cache(prefix: str = "[serve]") -> dict:
         cost_s = f"pred={pred_ms:.3f}ms"
         if meas is not None:
             cost_s += f" meas={meas:.3f}ms"
+        durs = sorted(obs_ms.get(f"{p['mkn']}|{p['backend']}", ()))
+        if durs:
+            p50 = durs[len(durs) // 2]
+            p99 = durs[min(len(durs) - 1, int(len(durs) * 0.99))]
+            cost_s += f" obs[n={len(durs)}]=p50:{p50:.3f}/p99:{p99:.3f}ms"
         dec = p.get("decision") or {}
         dec_bits = []
         for kind in ("backend", "sharding", "schedule"):
@@ -243,8 +257,14 @@ def serve_requests(
     results = []
     for i, prompts in enumerate(request_prompts):
         try:
-            _faults.check("serve.request", request=i)
-            results.append(generate(model, params, prompts, gen_len=gen_len, ctx=ctx))
+            # span attrs must not assume a well-formed request: the failure
+            # path below (and the chaos warmup's probe) serves garbage prompts
+            batch = int(getattr(prompts, "shape", (0,))[0] or 0)
+            with _obs.span("serve.request", request=i, batch=batch, gen=gen_len):
+                _faults.check("serve.request", request=i)
+                results.append(
+                    generate(model, params, prompts, gen_len=gen_len, ctx=ctx)
+                )
         except Exception as e:
             _rledger.record(
                 "serve.request",
@@ -288,6 +308,15 @@ def main(argv=None) -> None:
         help="print the GEMM plan cache after serving (one plan per spec)",
     )
     ap.add_argument(
+        "--obs-export",
+        default=None,
+        metavar="PATH",
+        help="enable structured tracing for the run and write a Chrome-trace "
+        "timeline to PATH at exit (plus PATH.prom Prometheus metrics and "
+        "PATH.jsonl raw spans); also bridges ledger events into metrics and "
+        "feeds plan.execute spans to the cost-model calibration cache",
+    )
+    ap.add_argument(
         "--mesh",
         default=None,
         metavar="DxM",
@@ -295,6 +324,15 @@ def main(argv=None) -> None:
         " 2x4 (needs that many devices; sharding constraints activate)",
     )
     args = ap.parse_args(argv)
+
+    if args.obs_export:
+        # Tracing + both bridge feeds go live BEFORE any model work so the
+        # timeline covers warmup, planning, and every request.  Exports are
+        # written once, at the end of main — the serving path stays I/O-free.
+        from repro.obs import bridge as _bridge
+
+        _obs.enable()
+        _bridge.install()
 
     ctx = ShardCtx()
     if args.mesh:
@@ -374,8 +412,36 @@ def main(argv=None) -> None:
             )
     if args.plan_stats:
         report_plan_cache()
+        if _obs.is_enabled():
+            st = _obs.stats()
+            print(
+                f"[serve] obs: {st['finished']} spans "
+                f"({st['retained']} retained, {st['dropped']} dropped, "
+                f"{st['suppressed_in_trace']} suppressed-in-jit)"
+            )
     if _rledger.count():
         print(_rledger.format_summary("[serve]"))
+
+    if args.obs_export:
+        from repro.obs import bridge as _bridge
+        from repro.obs import export as _export
+
+        ingested = _bridge.flush_calibration()
+        _export.write_chrome_trace(
+            args.obs_export,
+            metadata={
+                "arch": args.arch,
+                "requests": max(args.requests, 1),
+                "scheduler": bool(args.scheduler),
+                "calibration": _bridge.calibration_stamp(),
+            },
+        )
+        _export.write_prometheus(args.obs_export + ".prom")
+        _export.write_spans_jsonl(args.obs_export + ".jsonl")
+        print(
+            f"[serve] obs export: {args.obs_export} (+.prom, +.jsonl), "
+            f"{ingested} calibration records ingested"
+        )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,203 @@
+"""Bridges between obs and the rest of the system (DESIGN.md §14).
+
+Two one-way feeds, both installed by `install()` (idempotent):
+
+  ledger -> metrics   every `resilience.ledger.DegradationEvent` increments
+                      `repro_degradations_total{site, cause}` (cause is the
+                      exception-type head of the ledger's free-text cause,
+                      so label cardinality stays bounded).  Installation
+                      BACKFILLS events recorded before the bridge existed,
+                      so the counter equals the ledger exactly — the chaos
+                      CI job and `tests/test_obs.py` assert that equality.
+
+  spans -> calibration  finished `plan.execute` spans carrying cost-model
+                      `terms` (unsharded AND sharded/collective — the
+                      ShardedPlan terms include collective bytes/phases,
+                      the multi-device lane ROADMAP 2(a) was missing) are
+                      converted into `costmodel.calibrate.ingest()` records
+                      and BUFFERED.  Nothing touches the filesystem per
+                      span: `flush_calibration()` folds the buffer into the
+                      calibration cache at drain/exit, keeping the serving
+                      tick I/O-free.  `submit_calibration()` lets benches
+                      route their own blocked-and-timed measurements
+                      through the same lane (bench_costmodel does).
+
+`calibration_stamp()` reports the coefficients serving the planner right
+now — exported timelines embed it so a trace says which calibration
+predicted the plans it shows.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
+__all__ = [
+    "calibration_stamp",
+    "degradation_counter",
+    "flush_calibration",
+    "install",
+    "installed",
+    "pending_calibration_records",
+    "submit_calibration",
+    "uninstall",
+]
+
+DEGRADATION_COUNTER = "repro_degradations_total"
+_MAX_PENDING = 1024  # bounded: a serve run cannot grow the buffer unbounded
+
+_LOCK = threading.Lock()
+_INSTALLED = [False]
+_PENDING: List[Dict[str, Any]] = []
+# keys whose first (cold) execution has been seen and discarded: the first
+# p(a, b) for a plan includes jit compilation, and feeding a
+# compile-inclusive duration to the fitter would poison the coefficients
+_WARM: set = set()
+
+
+def degradation_counter() -> "_metrics.Counter":
+    return _metrics.counter(
+        DEGRADATION_COUNTER,
+        "resilience.ledger degradation events mirrored by the obs bridge",
+        labels=("site", "cause"),
+    )
+
+
+def _cause_head(cause: str) -> str:
+    """Bounded-cardinality cause label: the exception-type head."""
+    return str(cause).split(":", 1)[0].strip()[:64] or "unknown"
+
+
+def _mirror_event(ev) -> None:
+    degradation_counter().inc(site=ev.site, cause=_cause_head(ev.cause))
+
+
+def _on_span_end(sp: "_trace.Span") -> None:
+    if sp.name != "plan.execute":
+        return
+    terms = sp.attrs.get("terms")
+    if not isinstance(terms, dict):
+        return
+    ms = sp.duration_s * 1e3
+    if ms <= 0:
+        return
+    key = sp.attrs.get("key")
+    rec = {
+        "terms": terms,
+        "ms": ms,
+        "source": "obs",
+        "key": key,
+    }
+    with _LOCK:
+        if key not in _WARM:
+            _WARM.add(key)  # cold execution: compile-inclusive, discard
+            return
+        if len(_PENDING) < _MAX_PENDING:
+            _PENDING.append(rec)
+
+
+def install() -> None:
+    """Idempotently wire the ledger listener + span-end hook.  Events
+    recorded before the bridge existed are BACKFILLED first, so the counter
+    equals the ledger at the moment install returns; the listener keeps the
+    two in lockstep from there (an event reaches the counter exactly once:
+    subscription happens strictly after the backfill snapshot is taken)."""
+    from repro.resilience import ledger as _ledger
+
+    with _LOCK:
+        was = _INSTALLED[0]
+        _INSTALLED[0] = True
+    if was:
+        return
+    for ev in _ledger.events():
+        _mirror_event(ev)
+    _ledger.add_listener(_mirror_event)
+    _trace.on_span_end(_on_span_end)
+
+
+def uninstall() -> None:
+    """Test hook: detach both feeds and drop the pending buffer."""
+    from repro.resilience import ledger as _ledger
+
+    _ledger.remove_listener(_mirror_event)
+    _trace.remove_span_end(_on_span_end)
+    with _LOCK:
+        _INSTALLED[0] = False
+        _PENDING.clear()
+        _WARM.clear()
+
+
+def installed() -> bool:
+    return _INSTALLED[0]
+
+
+def submit_calibration(records: Sequence[Mapping[str, Any]]) -> int:
+    """Buffer externally measured `{"terms", "ms", ...}` records for the
+    next flush (the bench lane: blocked-and-timed sharded steps)."""
+    added = 0
+    with _LOCK:
+        for rec in records:
+            if len(_PENDING) >= _MAX_PENDING:
+                break
+            _PENDING.append(dict(rec))
+            added += 1
+    return added
+
+
+def pending_calibration_records() -> List[Dict[str, Any]]:
+    with _LOCK:
+        return [dict(r) for r in _PENDING]
+
+
+def flush_calibration(
+    *,
+    platform: Optional[str] = None,
+    refit: bool = True,
+    persist: bool = True,
+) -> int:
+    """Fold buffered records into the calibration cache (drain/exit only —
+    this is the ONLY filesystem touch on the span->calibration lane).
+    Returns the number of records ingested; failures degrade to 0 with a
+    ledger record, never raise into a shutdown path."""
+    with _LOCK:
+        batch, _PENDING[:] = list(_PENDING), []
+    if not batch:
+        return 0
+    try:
+        # module-path import: the package re-exports a `calibrate` FUNCTION
+        # that shadows the submodule name on attribute access
+        from repro.costmodel.calibrate import ingest as _ingest
+
+        return _ingest(batch, platform=platform, refit=refit, persist=persist)
+    except Exception as e:
+        from repro.resilience import ledger as _ledger
+
+        _ledger.record(
+            "obs.flush",
+            cause=f"{type(e).__name__}: {e}",
+            fallback="drop-batch",
+            records=len(batch),
+        )
+        return 0
+
+
+def calibration_stamp() -> Dict[str, Any]:
+    """The coefficients the planner is using right now, for timeline
+    metadata (which calibration predicted the plans this trace shows)."""
+    try:
+        from repro.costmodel.calibrate import current_coefficients, default_cache
+
+        co = current_coefficients()
+        return {
+            "platform": co.platform,
+            "source": co.source,
+            "flops_per_s": co.flops_per_s,
+            "link_bytes_per_s": co.link_bytes_per_s,
+            "phase_latency_s": co.phase_latency_s,
+            "cache_path": str(default_cache().path),
+        }
+    except Exception:
+        return {"source": "unavailable"}

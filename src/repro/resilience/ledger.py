@@ -20,11 +20,13 @@ from typing import Any, Dict, List, Optional, Tuple
 
 __all__ = [
     "DegradationEvent",
+    "add_listener",
     "clear",
     "count",
     "events",
     "format_summary",
     "record",
+    "remove_listener",
     "summary",
 ]
 
@@ -60,6 +62,23 @@ class DegradationEvent:
 _EVENTS: List[DegradationEvent] = []
 _SEQ = [0]
 _LOCK = threading.Lock()
+_LISTENERS: List[Any] = []
+
+
+def add_listener(fn) -> None:
+    """Subscribe `fn(event)` to every future `record()` (the obs bridge
+    mirrors events into metrics through this).  Listeners run OUTSIDE the
+    ledger lock; a raising listener is ignored, never the recorder's
+    problem."""
+    with _LOCK:
+        if fn not in _LISTENERS:
+            _LISTENERS.append(fn)
+
+
+def remove_listener(fn) -> None:
+    with _LOCK:
+        if fn in _LISTENERS:
+            _LISTENERS.remove(fn)
 
 
 def record(site: str, cause: str, fallback: str, **detail: Any) -> DegradationEvent:
@@ -74,6 +93,12 @@ def record(site: str, cause: str, fallback: str, **detail: Any) -> DegradationEv
             detail=tuple(sorted((str(k), repr(v)) for k, v in detail.items())),
         )
         _EVENTS.append(ev)
+        listeners = list(_LISTENERS)
+    for fn in listeners:
+        try:
+            fn(ev)
+        except Exception:
+            pass
     return ev
 
 

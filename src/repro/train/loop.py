@@ -49,6 +49,7 @@ def train_loop(
     `data_iter` must expose .state()/.restore(step) (see data/pipeline.py);
     checkpoint metadata records the data position so resume is exact.
     """
+    owns_logger = logger is None
     logger = logger or MetricsLogger()
     step = int(jax.device_get(state["step"]))
     restarts = 0
@@ -104,4 +105,6 @@ def train_loop(
     if checkpointer is not None:
         checkpointer.wait()
     logger.summary({"restarts": restarts, "stragglers": stragglers, "final_step": step})
+    if owns_logger:
+        logger.close()  # a caller-provided logger stays open for the caller
     return state

@@ -1,4 +1,11 @@
-"""Minimal structured metrics logging (stdout + optional JSONL file)."""
+"""Minimal structured metrics logging (stdout + optional JSONL file).
+
+The optional file lane writes through `repro.obs.export.JsonlSink`, which
+owns the handle: `close()` (or using the logger as a context manager)
+releases it deterministically instead of leaking an open append handle for
+the life of the process.  The printing API (`log` / `warn` / `summary`) is
+unchanged — `train.loop` and the tests call it exactly as before.
+"""
 
 from __future__ import annotations
 
@@ -7,6 +14,8 @@ import sys
 import time
 from typing import Any, Dict, Optional
 
+from repro.obs.export import JsonlSink
+
 __all__ = ["MetricsLogger"]
 
 
@@ -14,8 +23,12 @@ class MetricsLogger:
     def __init__(self, path: Optional[str] = None, stream=None):
         self.path = path
         self.stream = stream or sys.stdout
-        self._fh = open(path, "a") if path else None
+        self._sink = JsonlSink(path) if path else None
         self.history: list = []
+
+    @property
+    def closed(self) -> bool:
+        return self._sink.closed if self._sink else False
 
     def log(self, step: int, metrics: Dict[str, Any]) -> None:
         rec = {"step": step, "t": time.time(), **metrics}
@@ -25,15 +38,23 @@ class MetricsLogger:
             for k, v in metrics.items()
         )
         print(f"[step {step}] {short}", file=self.stream)
-        if self._fh:
-            self._fh.write(json.dumps(rec) + "\n")
-            self._fh.flush()
+        if self._sink:
+            self._sink.write(rec)
 
     def warn(self, msg: str) -> None:
         print(f"[warn] {msg}", file=self.stream)
 
     def summary(self, info: Dict[str, Any]) -> None:
         print(f"[summary] {json.dumps(info)}", file=self.stream)
-        if self._fh:
-            self._fh.write(json.dumps({"summary": info}) + "\n")
-            self._fh.flush()
+        if self._sink:
+            self._sink.write({"summary": info})
+
+    def close(self) -> None:
+        if self._sink:
+            self._sink.close()
+
+    def __enter__(self) -> "MetricsLogger":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
