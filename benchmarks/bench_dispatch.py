@@ -11,6 +11,9 @@ measures what that saves per call.  Three variants over the same GEMM:
   planned   one Plan built up front, called directly — the serving hot path
   raw       plan.executor called directly — no per-call Python validation
             (the floor: pure jitted-dispatch latency)
+  async_batch8  eight independent `Plan.dispatch` calls enqueued, then ONE
+            block (api.execute_async) — vs eight sync round-trips; per-call
+            µs, so the win is the amortized synchronization
 
 plus the amortized-away cost itself:
 
@@ -58,6 +61,18 @@ def run(as_dict=False):
         "prebuilt_plan": _time_per_call(lambda: plan(a, b)),
         "raw_executor": _time_per_call(lambda: plan.executor(a, b, None, None)),
     }
+
+    def _async_batch(batch=8):
+        # dispatch `batch` independent calls, sync once at the end; report
+        # per-call µs so the row is comparable to the sync paths above
+        items = [(plan, (a, b))] * batch
+        api.execute_async(items)  # warm
+        t0 = time.perf_counter()
+        for _ in range(ITERS // batch):
+            api.execute_async(items)
+        return (time.perf_counter() - t0) / (ITERS // batch * batch) * 1e6
+
+    rows["async_batch8"] = _async_batch()
 
     def _build_cold():
         # snapshot + restore the whole cache/stats around the cold build so

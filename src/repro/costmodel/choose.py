@@ -11,8 +11,10 @@ left unspecified:
   decide_sharding   plan(spec, mesh=...) with NO ShardSpec — enumerate axis
                     assignments over the live mesh (M-replicated,
                     allgather_a, reduce_scatter_k, ring_k, N-replicated,
-                    2D M x N, expert for grouped specs, plus unsharded) and
-                    return the cheapest legal ShardSpec
+                    2D M x N, expert for grouped specs, plus unsharded —
+                    and, under CALIBRATED coefficients, the double-buffered
+                    `*_overlap`/`pipeline` family) and return the cheapest
+                    legal ShardSpec
   decide_backend    rank the capability-legal backends by predicted cost
                     (per-platform `backend_efficiency`); the caller's
                     legacy preference order is the deterministic tie-break
@@ -62,8 +64,26 @@ __all__ = [
 _ENV_TIMED = "REPRO_COSTMODEL_TIMED"
 
 # Deterministic preference among predicted-cost ties (cheap-first philosophy:
-# no collective beats a scatter beats a gather beats a full ring wavefront).
-_SCHED_PREF = ("replicated", "reduce_scatter_k", "allgather_a", "ring_k", "expert")
+# no collective beats a scatter beats a gather beats a full ring wavefront;
+# a serial schedule beats its overlap twin at equal prediction — simpler
+# dataflow — so overlap only wins when calibrated link terms say it does).
+_SCHED_PREF = (
+    "replicated",
+    "reduce_scatter_k",
+    "allgather_a",
+    "ring_k",
+    "reduce_scatter_k_overlap",
+    "allgather_a_overlap",
+    "ring_k_overlap",
+    "pipeline",
+    "expert",
+)
+
+
+def _is_overlap(sched: str) -> bool:
+    """Mirror of `api._is_overlap_schedule` (duplicated to avoid the import
+    cycle): double-buffered ring schedules priced as max(compute, comm)."""
+    return sched.endswith("_overlap") or sched == "pipeline"
 
 
 class NoLegalCandidate(Exception):
@@ -109,8 +129,21 @@ def _best_backend(coeffs: CostCoefficients) -> Optional[str]:
 def _candidate_terms(spec, sched: str, local, bytes_moved: int, phases: int):
     """Synthesize the describe()-shaped record for a candidate that has not
     been planned yet, and derive its cost terms (one arithmetic path:
-    `model.terms_from_describe`)."""
-    inv = phases + 1 if sched in ("allgather_a", "reduce_scatter_k") else 1
+    `model.terms_from_describe`).  The invocation arithmetic mirrors
+    `api._build_sharded_plan` exactly — a drifted copy here would misprice
+    candidates against the plans they become."""
+    if sched in ("reduce_scatter_k", "reduce_scatter_k_overlap"):
+        inv = phases + 1
+    elif sched in ("allgather_a_overlap", "ring_k_overlap"):
+        inv = 2  # two column-half kernel calls
+    elif sched == "pipeline":
+        from repro.kernels import api as _api
+
+        inv = _api._pipeline_microbatches(
+            spec.eff_m, spec.shard.axis_size(spec.shard.axis_k)
+        )
+    else:
+        inv = 1
     desc: Dict[str, Any] = {
         "backend": None,
         "mkn": f"{spec.eff_m}x{spec.k}x{spec.n}",
@@ -137,6 +170,7 @@ def _candidate_terms(spec, sched: str, local, bytes_moved: int, phases: int):
     shard = spec.shard
     desc["sharding"] = {
         "schedule": sched,
+        "overlap": _is_overlap(sched),
         "bytes_moved": bytes_moved,
         "collective_phases": phases,
         "kernel_invocations": inv,
@@ -182,6 +216,7 @@ def _evaluate(spec, shard, coeffs) -> Tuple[Optional[Dict[str, Any]], Optional[s
         return None, str(e)
     terms = _candidate_terms(trial, sched, local, bytes_moved, phases)
     pred = predict(terms, coeffs, backend=_best_backend(coeffs))
+    overlap = bool(terms.get("overlap"))
     return (
         {
             "name": sched,
@@ -190,6 +225,14 @@ def _evaluate(spec, shard, coeffs) -> Tuple[Optional[Dict[str, Any]], Optional[s
             "t_compute_s": pred["t_compute_s"],
             "t_memory_s": pred["t_memory_s"],
             "t_collective_s": pred["t_collective_s"],
+            "overlap": overlap,
+            # how total_s was composed — the §15 pricing, visible in
+            # describe()["decision"] provenance
+            "pricing": (
+                "max(compute,memory,collective)+latency"
+                if overlap
+                else "max(compute,memory)+collective+latency"
+            ),
             "legal": True,
         },
         None,
@@ -250,17 +293,26 @@ def decide_schedule(spec, mesh=None) -> Tuple[str, Decision]:
     Candidates are the non-expert SCHEDULES (expert belongs to grouped
     specs, which route `_resolve_grouped_sharding`); each is legality-
     trialed with the schedule pinned and the survivors are ranked by
-    predicted cost.  Raises NoLegalCandidate when nothing survives so the
-    caller's legacy heuristic can produce its precise validation error.
+    predicted cost.  The overlap family (`*_overlap` / `pipeline`) only
+    enters the candidate set under CALIBRATED coefficients: with shipped
+    defaults (zero latency terms) its max(compute, comm) pricing would
+    dominate every serial schedule unconditionally, and auto resolution
+    must stay legacy-equivalent until real link measurements justify the
+    switch.  Pinning an overlap schedule explicitly always works.  Raises
+    NoLegalCandidate when nothing survives so the caller's legacy heuristic
+    can produce its precise validation error.
     """
     from repro.kernels import api
 
     coeffs = current_coefficients()
+    overlap_ok = coeffs.source == "calibrated"
     shard = spec.shard
     cands: List[Dict[str, Any]] = []
     illegal: List[Dict[str, Any]] = []
     shards: Dict[str, Any] = {}
     for sched in (s for s in api.SCHEDULES if s != "expert"):
+        if _is_overlap(sched) and not overlap_ok:
+            continue
         pinned = dataclasses.replace(shard, schedule=sched)
         cand, reason = _evaluate(spec, pinned, coeffs)
         if cand is not None:
@@ -280,8 +332,13 @@ def decide_schedule(spec, mesh=None) -> Tuple[str, Decision]:
     return chosen, Decision("schedule", chosen, ranked, _stamp(coeffs))
 
 
-def _sharding_candidates(spec, mesh) -> List[Tuple[str, Any]]:
-    """(label, ShardSpec) axis assignments to trial over the live mesh."""
+def _sharding_candidates(
+    spec, mesh, *, overlap_ok: bool = False
+) -> List[Tuple[str, Any]]:
+    """(label, ShardSpec) axis assignments to trial over the live mesh.
+
+    `overlap_ok` admits the double-buffered family — gated on calibrated
+    coefficients by the caller, same reasoning as `decide_schedule`."""
     from repro.kernels.api import ShardSpec
 
     axes = list(mesh.shape.items())
@@ -326,6 +383,31 @@ def _sharding_candidates(spec, mesh) -> List[Tuple[str, Any]]:
                 ),
             ]
         )
+        if overlap_ok:
+            out.extend(
+                [
+                    (
+                        f"reduce_scatter_k_overlap[k={name}]",
+                        ShardSpec.from_mesh(
+                            mesh, k=name, schedule="reduce_scatter_k_overlap"
+                        ),
+                    ),
+                    (
+                        f"allgather_a_overlap[m={name}]",
+                        ShardSpec.from_mesh(
+                            mesh, m=name, schedule="allgather_a_overlap"
+                        ),
+                    ),
+                    (
+                        f"ring_k_overlap[k={name}]",
+                        ShardSpec.from_mesh(mesh, k=name, schedule="ring_k_overlap"),
+                    ),
+                    (
+                        f"pipeline[k={name}]",
+                        ShardSpec.from_mesh(mesh, k=name, schedule="pipeline"),
+                    ),
+                ]
+            )
         if spec.batched_b:
             out.append(
                 (
@@ -366,7 +448,8 @@ def decide_sharding(spec, mesh) -> Tuple[Any, Decision]:
     cands: List[Dict[str, Any]] = []
     illegal: List[Dict[str, Any]] = []
     shards: Dict[str, Any] = {}
-    for label, shard in _sharding_candidates(spec, mesh):
+    overlap_ok = coeffs.source == "calibrated"
+    for label, shard in _sharding_candidates(spec, mesh, overlap_ok=overlap_ok):
         cand, reason = _evaluate(spec, shard, coeffs)
         if cand is not None:
             cand["name"] = label

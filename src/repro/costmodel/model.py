@@ -21,10 +21,15 @@ Two ingredients go beyond a plain roofline, both from the paper family:
     2n-1 toward n; the B operand also streams once, not r times.
 
 `predict` combines the terms as `max(compute, memory) + collective +
-latency`: compute and HBM streaming overlap (the kernels are pipelined) but
-the collective schedules here are gather-then-compute barriers, and each
-collective phase / kernel launch pays a fixed latency the byte terms can't
-see (the coefficients calibration actually fits on small probes).
+latency` for the serial schedules: compute and HBM streaming overlap (the
+kernels are pipelined) but a gather-then-compute collective is a barrier,
+and each collective phase / kernel launch pays a fixed latency the byte
+terms can't see (the coefficients calibration actually fits on small
+probes).  For the double-buffered schedules (`*_overlap` / `pipeline`,
+DESIGN.md §15) every ring hop is issued behind a kernel call, so the
+steady state is `max(compute, memory, collective) + latency` — the overlap
+pricing that lets a calibrated `schedule="auto"` pick them whenever the
+link time would otherwise be exposed.
 """
 
 from __future__ import annotations
@@ -223,6 +228,7 @@ def terms_from_describe(desc: Mapping[str, Any]) -> Dict[str, Any]:
         "collective_bytes": int(sh.get("bytes_moved", 0)),
         "collective_phases": int(sh.get("collective_phases", 0)),
         "kernel_invocations": inv,
+        "overlap": bool(sh.get("overlap", False)),
         "schedule": sh.get("schedule"),
         "structure": desc.get("structure", "general"),
         "readout_n": n,
@@ -240,10 +246,13 @@ def predict(
     """Predicted seconds for one execution of a plan with these terms.
 
     total = max(compute, memory) + collective + latency — compute overlaps
-    HBM streaming, the collective is a barrier, and latency charges the
-    per-phase and per-launch fixed costs.  The paper-structure factors
-    scale the compute term (symmetric early readout) and amortize launch
-    latency and B streaming over `repeats` pipelined products.
+    HBM streaming, a serial collective is a barrier, and latency charges
+    the per-phase and per-launch fixed costs.  Terms with `overlap` set
+    (the double-buffered ring schedules) hide the collective behind the
+    kernel calls instead: total = max(compute, memory, collective) +
+    latency.  The paper-structure factors scale the compute term
+    (symmetric early readout) and amortize launch latency and B streaming
+    over `repeats` pipelined products.
     """
     be = backend if backend is not None else terms.get("backend")
     eff = max(coeffs.efficiency(be), 1e-6)
@@ -267,12 +276,17 @@ def predict(
         terms.get("collective_phases", 0) * coeffs.phase_latency_s
         + terms.get("kernel_invocations", 1) * coeffs.launch_overhead_s * amort
     )
+    if terms.get("overlap"):
+        # double-buffered ring: hops hidden behind kernel calls (§15)
+        total = max(t_compute, t_memory, t_collective) + t_latency
+    else:
+        total = max(t_compute, t_memory) + t_collective + t_latency
     return {
         "t_compute_s": t_compute,
         "t_memory_s": t_memory,
         "t_collective_s": t_collective,
         "t_latency_s": t_latency,
-        "total_s": max(t_compute, t_memory) + t_collective + t_latency,
+        "total_s": total,
     }
 
 

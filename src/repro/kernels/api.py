@@ -102,10 +102,12 @@ __all__ = [
     "ShardSpec",
     "ShardedGroupedPlan",
     "ShardedPlan",
+    "AsyncResult",
     "apply_epilogue",
     "backend_names",
     "clear_plan_cache",
     "default_backend",
+    "execute_async",
     "get_capabilities",
     "get_default",
     "plan",
@@ -117,25 +119,63 @@ __all__ = [
 
 STRUCTURES = ("general", "symmetric", "scrambled")
 
-# Collective schedules a ShardedPlan can lower to (DESIGN.md §9):
+# Collective schedules a ShardedPlan can lower to (DESIGN.md §9, §15):
 #   replicated        no collective — M/N/batch partitions are purely local
 #                     (each device owns its C tile; all-None axes = the fully
 #                     replicated degenerate case unsharded specs route through)
-#   allgather_a       A row-sharded on M; the all-gather is fused into the ring
-#                     of per-shard kernel calls (collectives.ring_allgather_matmul);
-#                     output replicated
+#   allgather_a       A row-sharded on M; each device computes its result
+#                     chunk ONCE and the f32 chunks circulate the ring
+#                     (collectives.ring_allgather_matmul); output replicated
 #   reduce_scatter_k  A/B sharded on K; partial products ring-reduced so each
 #                     device ends with its M/p row slice
 #                     (collectives.matmul_ring_reducescatter)
 #   ring_k            A/B sharded on K; the paper's 2n-1 staggered feed as p
 #                     accumulator wavefronts ppermuting around the ring
 #                     (systolic.ring_systolic_kpass); output replicated
+#   *_overlap         double-buffered twin of the base schedule: every ring
+#                     hop is issued while a kernel call runs, so steady-state
+#                     step time is max(compute, comm) instead of the sum —
+#                     bitwise-equal outputs to the serial twin on the XLA
+#                     backend (the serial path is the oracle).  The column-
+#                     half variants (allgather_a/ring_k) build the per-shard
+#                     kernel at n/2, so they need even N and axis size >= 2.
+#   pipeline          A/B sharded on K like reduce_scatter_k, but the per-rank
+#                     row block is 1F1B-microbatched: accumulator chains flow
+#                     through the stage ring one tick apart with every hop
+#                     double-buffered (collectives.ring_pipeline_matmul);
+#                     output row-sharded, bitwise-equal to reduce_scatter_k
 #   expert            grouped specs only: the group (expert) dim sharded over
 #                     axis_g — tokens/weights/sizes reshard at the shard_map
 #                     boundary (the EP all-to-all), each device runs the
 #                     grouped kernel over its local groups, output rows stay
 #                     group-sharded
-SCHEDULES = ("replicated", "allgather_a", "reduce_scatter_k", "ring_k", "expert")
+SCHEDULES = (
+    "replicated",
+    "allgather_a",
+    "allgather_a_overlap",
+    "reduce_scatter_k",
+    "reduce_scatter_k_overlap",
+    "ring_k",
+    "ring_k_overlap",
+    "pipeline",
+    "expert",
+)
+
+
+def _is_overlap_schedule(sched: str) -> bool:
+    """True for schedules whose ring hops are double-buffered against kernel
+    calls — the cost model prices their collective under max(compute, comm)
+    instead of adding it (costmodel.model.predict)."""
+    return sched.endswith("_overlap") or sched == "pipeline"
+
+
+def _pipeline_microbatches(eff_m: int, pk: int) -> int:
+    """Microbatch count for the `pipeline` schedule: two chains per stage
+    when the per-stage row block splits evenly (so the steady state always
+    has one hop in flight behind one kernel), else one."""
+    mb = eff_m // pk
+    f = 2 if mb >= 2 and mb % 2 == 0 else 1
+    return f * pk
 
 
 # ---------------------------------------------------------------------------
@@ -1104,6 +1144,28 @@ _gmm.defvjp(_gmm_fwd, _gmm_bwd)
 # ---------------------------------------------------------------------------
 
 
+class AsyncResult:
+    """Handle for a dispatched plan execution (DESIGN.md §15).
+
+    jax arrays are futures already — the device computes in the background
+    until something reads the value.  This handle makes that contract
+    explicit: `out` is the (possibly still computing) array, `block()`
+    waits for it and returns it.  Blocking raises whatever the device run
+    raised (XLA defers errors to the sync point).
+    """
+
+    __slots__ = ("plan", "out")
+
+    def __init__(self, plan: "Plan", out: jax.Array):
+        self.plan = plan
+        self.out = out
+
+    def block(self) -> jax.Array:
+        """Wait for the dispatched execution and return its result."""
+        jax.block_until_ready(self.out)
+        return self.out
+
+
 @dataclasses.dataclass
 class Plan:
     """A resolved, reusable GEMM executable with provenance.
@@ -1241,6 +1303,29 @@ class Plan:
     def __call__(self, a, b, bias=None, residual=None) -> jax.Array:
         self._check_operands(a, b, bias, residual)
         return self._execute((a, b, bias, residual))
+
+    def dispatch(self, a, b, bias=None, residual=None) -> AsyncResult:
+        """Enqueue an execution and return without waiting on the device.
+
+        jax dispatches asynchronously by construction, so this costs what
+        `__call__` costs minus any value read; the point is the explicit
+        contract: validation and enqueue happen NOW, device work proceeds in
+        the background, and `AsyncResult.block()` (or `execute_async` over a
+        batch of independent plans) is the single sync point.  The enqueue
+        runs under its own `plan.dispatch` obs span — NOT `plan.execute`,
+        whose warm spans feed cost-model calibration and must measure device
+        walltime, not host enqueue time.  Caveat: a plan with a
+        `guard_nonfinite` policy host-syncs inside execution to inspect the
+        output, so its dispatch is effectively synchronous (the guard wins).
+        """
+        self._check_operands(a, b, bias, residual)
+        args = (a, b, bias, residual)
+        if _obs._STATE.enabled:
+            with _obs.span("plan.dispatch", **self._obs_attrs()):
+                out = self._execute_impl(args)
+        else:
+            out = self._execute_impl(args)
+        return AsyncResult(self, out)
 
     # -- resilience (DESIGN.md §11) ------------------------------------------
 
@@ -1473,8 +1558,18 @@ class ShardedPlan(Plan):
     bytes_moved: int = 0
     collective_phases: int = 0
     # Ring-schedule devices run the local kernel once per ring step, so the
-    # per-DEVICE work is local.flops x this (allgather_a/reduce_scatter_k: p).
+    # per-DEVICE work is local.flops x this (reduce_scatter family: p;
+    # column-half overlap variants: 2; pipeline: microbatch count).
     kernel_invocations: int = 1
+    # Measured serial_ms / overlap_ms for this plan's schedule vs its serial
+    # twin — recorded by benchmarks via `note_overlap_efficiency`, None until
+    # something measured it (provenance, never consulted by execution).
+    overlap_efficiency: Optional[float] = None
+
+    def note_overlap_efficiency(self, ratio: float) -> None:
+        """Record a measured serial/overlap time ratio (>1 means the
+        double-buffered schedule won); shows up in describe()["sharding"]."""
+        self.overlap_efficiency = float(ratio)
 
     def describe(self) -> Dict[str, Any]:
         d = super().describe()
@@ -1490,6 +1585,8 @@ class ShardedPlan(Plan):
                 "g": shard.axis_g,
             },
             "schedule": self.schedule,
+            "overlap": _is_overlap_schedule(self.schedule),
+            "overlap_efficiency": self.overlap_efficiency,
             "collective_phases": self.collective_phases,
             "bytes_moved": self.bytes_moved,
             "kernel_invocations": self.kernel_invocations,
@@ -2142,21 +2239,42 @@ def _resolve_sharding(
             lm = div("M", eff_m, shard.axis_m, pm)
         lk, ln = spec.k, div("N", spec.n, shard.axis_n, pn)
         bytes_moved, phases = 0, 0
-    elif sched == "allgather_a":
+    elif sched in ("allgather_a", "allgather_a_overlap"):
         if not isinstance(shard.axis_m, str):
             raise PlanValidationError(
-                "schedule 'allgather_a' needs a single mesh axis on M"
+                f"schedule {sched!r} needs a single mesh axis on M"
                 f" (axis_m={shard.axis_m!r}) — the gather is a 1D ring"
             )
         if pk > 1 or pn > 1:
             raise PlanValidationError(
-                "schedule 'allgather_a' shards only M; drop axis_k/axis_n"
+                f"schedule {sched!r} shards only M; drop axis_k/axis_n"
             )
         lm = div("M", eff_m, shard.axis_m, pm)
         lk, ln = spec.k, spec.n
-        bytes_moved = (pm - 1) * lm * spec.k * jnp.dtype(spec.dtype_a).itemsize
+        if sched == "allgather_a_overlap":
+            if pm < 2:
+                raise PlanValidationError(
+                    "schedule 'allgather_a_overlap' double-buffers a ring of"
+                    f" size >= 2; axis_m={shard.axis_m!r} has size {pm}"
+                )
+            if spec.n < 2 or spec.n % 2:
+                raise PlanValidationError(
+                    "schedule 'allgather_a_overlap' splits the local product"
+                    f" into two column halves; N={spec.n} must be even"
+                )
+            ln = spec.n // 2  # per-shard kernel built at the half width
+        # Each device computes its (lm, n) result chunk ONCE; the f32 chunks
+        # hop the ring pm-1 times (input rotation would re-run the full-K
+        # kernel pm times for the same bytes — the old pathology).
+        bytes_moved = (pm - 1) * lm * spec.n * 4
         phases = pm - 1
-    elif sched in ("reduce_scatter_k", "ring_k"):
+    elif sched in (
+        "reduce_scatter_k",
+        "reduce_scatter_k_overlap",
+        "ring_k",
+        "ring_k_overlap",
+        "pipeline",
+    ):
         if shard.axis_k is None:
             raise PlanValidationError(f"schedule {sched!r} requires axis_k")
         if pm > 1 or pn > 1:
@@ -2171,15 +2289,36 @@ def _resolve_sharding(
             )
         lk = div("K", spec.k, shard.axis_k, pk)
         ln = spec.n
-        if sched == "reduce_scatter_k":
+        if sched in ("reduce_scatter_k", "reduce_scatter_k_overlap"):
             lm = div("M", eff_m, shard.axis_k, pk)
             # f32 accumulator row-chunks hop the ring p-1 times
             bytes_moved = (pk - 1) * lm * spec.n * 4
-        else:
+            phases = pk - 1
+        elif sched == "pipeline":
+            mb = div("M", eff_m, shard.axis_k, pk)
+            micro = _pipeline_microbatches(eff_m, pk)
+            lm = eff_m // micro  # one microbatch chain per kernel call
+            # same total accumulator bytes as reduce_scatter_k, split over
+            # micro/pk chains of (pk-1) hops each
+            bytes_moved = (pk - 1) * mb * spec.n * 4
+            phases = micro - micro // pk  # (micro/pk chains) x (pk-1) hops
+        else:  # ring_k / ring_k_overlap
             lm = eff_m
+            if sched == "ring_k_overlap":
+                if pk < 2:
+                    raise PlanValidationError(
+                        "schedule 'ring_k_overlap' double-buffers a ring of"
+                        f" size >= 2; axis_k={shard.axis_k!r} has size {pk}"
+                    )
+                if spec.n < 2 or spec.n % 2:
+                    raise PlanValidationError(
+                        "schedule 'ring_k_overlap' splits the partial into"
+                        f" two column halves; N={spec.n} must be even"
+                    )
+                ln = spec.n // 2  # per-shard kernel built at the half width
             # full f32 accumulator wavefronts hop the ring p-1 times
             bytes_moved = (pk - 1) * eff_m * spec.n * 4
-        phases = pk - 1
+            phases = pk - 1
     else:  # pragma: no cover — ShardSpec.__post_init__ rejects unknown names
         raise PlanValidationError(f"unknown schedule {sched!r}")
 
@@ -2306,6 +2445,7 @@ def _sharded_executor(
     from repro.parallel.collectives import (
         matmul_ring_reducescatter,
         ring_allgather_matmul,
+        ring_pipeline_matmul,
     )
     from repro.parallel.sharding import shard_map as _shard_map
     from repro.parallel.systolic import ring_systolic_kpass
@@ -2315,6 +2455,8 @@ def _sharded_executor(
     act = epi.activation
     out_dt = jnp.dtype(spec.resolved_out_dtype())
     am, ak, an, ab = shard.axis_m, shard.axis_k, shard.axis_n, shard.axis_batch
+    overlap = sched.endswith("_overlap")
+    base = sched[: -len("_overlap")] if overlap else sched
 
     def local_mm(x, y):
         return local_plan._fn(x, y, None, None)
@@ -2327,15 +2469,18 @@ def _sharded_executor(
         in_a, in_b = P(am, None), P(None, an)
         in_bias, in_res = P(an), P(am, an)
         out_spec = P(am, an)
-    elif sched == "allgather_a":
+    elif base == "allgather_a":
         in_a, in_b, in_bias, in_res = P(am, None), P(), P(), P()
         out_spec = P()
-    elif sched == "reduce_scatter_k":
+    elif base in ("reduce_scatter_k", "pipeline"):
         in_a, in_b, in_bias = P(None, ak), P(ak, None), P()
         in_res = out_spec = P(ak, None)
-    else:  # ring_k
+    else:  # ring_k / ring_k_overlap
         in_a, in_b, in_bias, in_res = P(None, ak), P(ak, None), P(), P()
         out_spec = P()
+
+    if sched == "pipeline":
+        micro = _pipeline_microbatches(spec.eff_m, shard.axis_size(ak))
 
     def body(*args):
         a_blk, b_blk, *rest = args
@@ -2344,12 +2489,22 @@ def _sharded_executor(
         res_blk = next(it) if epi.residual else None
         if sched == "replicated":
             z = local_plan._fn(a_blk, b_blk, None, None)
-        elif sched == "allgather_a":
-            z = ring_allgather_matmul(a_blk, b_blk, am, matmul=local_mm)
-        elif sched == "reduce_scatter_k":
-            z = matmul_ring_reducescatter(a_blk, b_blk, ak, matmul=local_mm)
+        elif base == "allgather_a":
+            z = ring_allgather_matmul(
+                a_blk, b_blk, am, matmul=local_mm, overlap=overlap
+            )
+        elif base == "reduce_scatter_k":
+            z = matmul_ring_reducescatter(
+                a_blk, b_blk, ak, matmul=local_mm, overlap=overlap
+            )
+        elif sched == "pipeline":
+            z = ring_pipeline_matmul(
+                a_blk, b_blk, ak, microbatches=micro, matmul=local_mm
+            )
         else:
-            z = ring_systolic_kpass(a_blk, b_blk, axis=ak, matmul=local_mm)
+            z = ring_systolic_kpass(
+                a_blk, b_blk, axis=ak, matmul=local_mm, overlap=overlap
+            )
         return apply_epilogue(z, bias_blk, act, res_blk).astype(out_dt)
 
     in_specs = [in_a, in_b]
@@ -2405,9 +2560,21 @@ def _build_sharded_plan(spec: GemmSpec, be: _Backend, mesh: Mesh) -> ShardedPlan
         )
     sched, local_spec, bytes_moved, phases, sched_decision = _resolve_sharding(spec)
     local_plan = plan(local_spec, backend=be.name)
-    # allgather_a / reduce_scatter_k run the local kernel once per ring step
-    # (p = phases + 1); replicated, ring_k and expert invoke it exactly once.
-    invocations = phases + 1 if sched in ("allgather_a", "reduce_scatter_k") else 1
+    # Per-device kernel calls: the reduce-scatter family runs the local
+    # kernel once per ring step (p = phases + 1); pipeline runs it once per
+    # microbatch chain step; the column-half overlap variants run the
+    # half-width kernel twice; allgather_a (result-gather), replicated,
+    # ring_k and expert invoke it exactly once.
+    if sched in ("reduce_scatter_k", "reduce_scatter_k_overlap"):
+        invocations = phases + 1
+    elif sched == "pipeline":
+        invocations = _pipeline_microbatches(
+            spec.eff_m, shard.axis_size(shard.axis_k)
+        )
+    elif sched in ("allgather_a_overlap", "ring_k_overlap"):
+        invocations = 2
+    else:
+        invocations = 1
     cls = ShardedGroupedPlan if spec.group is not None else ShardedPlan
     p = cls(
         spec=spec,
@@ -2434,6 +2601,23 @@ def _build_sharded_plan(spec: GemmSpec, be: _Backend, mesh: Mesh) -> ShardedPlan
     )
     p._fn = executor(spec, sched, mesh, local_plan)
     return p
+
+
+def execute_async(items) -> List[jax.Array]:
+    """Dispatch independent plan executions back-to-back, sync ONCE at the end.
+
+    `items` is an iterable of `(plan, args)` pairs, `args` the positional
+    operand tuple for that plan (`(a, b)`, optionally with bias/residual).
+    All executions are enqueued before anything blocks, so the device (and
+    XLA's async dispatch queue) overlaps them host-side; the return is the
+    list of ready outputs in input order.  This is the batch form of
+    `Plan.dispatch` — use it when a serve tick or benchmark has several
+    independent GEMMs and per-call `block_until_ready` would serialize them.
+    """
+    handles = [p.dispatch(*args) for p, args in items]
+    outs = [h.out for h in handles]
+    jax.block_until_ready(outs)
+    return outs
 
 
 def clear_plan_cache() -> None:

@@ -49,6 +49,7 @@ _HINTS = {
     "compute": "reduce recompute (remat policy) / pick a lower-waste schedule — HLO FLOPs exceed the useful-model floor",
     "memory": "raise arithmetic intensity: fuse ops, larger per-chip tiles, avoid streaming weights/caches more than once",
     "collective": "reshard to cut ICI traffic: different TP axis placement, overlap/ring schedules, gradient compression",
+    "collective(hidden)": "collective is the largest term but the schedule double-buffers it behind kernel calls — already hidden; cut link bytes to go faster",
 }
 
 
@@ -137,10 +138,21 @@ def analyze_plan(desc: Dict[str, Any]) -> Dict[str, Any]:
         "collective": coll_bytes / LINK_BW,
     }
     dominant = max(terms, key=terms.get)
+    overlap = bool(t.get("overlap"))
+    # An overlapped schedule hides the collective behind kernel calls: the
+    # bound is max of all three terms (DESIGN.md §15), and a collective-
+    # dominant cell gets the "already hidden" hint instead of the reshard one.
+    if overlap:
+        t_total = max(terms.values())
+        hint_key = "collective(hidden)" if dominant == "collective" else dominant
+    else:
+        t_total = max(terms["compute"], terms["memory"]) + terms["collective"]
+        hint_key = dominant
     out = {
         "backend": desc["backend"],
         "mkn": desc["mkn"],
         "schedule": sh.get("schedule"),
+        "overlap": overlap,
         "per_shard_flops": flops,
         "hbm_bytes": hbm_bytes,
         "collective_bytes": coll_bytes,
@@ -150,7 +162,8 @@ def analyze_plan(desc: Dict[str, Any]) -> Dict[str, Any]:
         "t_collective_s": terms["collective"],
         "dominant": dominant,
         "t_bound_s": terms[dominant],
-        "hint": _HINTS[dominant],
+        "t_total_s": t_total,
+        "hint": _HINTS[hint_key],
     }
     if grp:
         out["grouped"] = {

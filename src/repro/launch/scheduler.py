@@ -636,7 +636,13 @@ class ContinuousBatchingServer:
             api.GemmSpec.from_operands(a, a, blocks=(8, 8, 8)),
             guard_nonfinite="zero_and_record",
         )
-        canary(a, a)
+        # Async dispatch (DESIGN.md §15): the cold compile proceeds in the
+        # background while the prefill/decode warmups below build their own
+        # traces; the handle is collected after.  The guarded canary
+        # host-syncs inside execution anyway (documented dispatch caveat),
+        # but the call path exercises plan.dispatch on every serve startup.
+        cold = canary.dispatch(a, a)
+        cold.block()
         # Second execution is compile-free: when tracing is on, its
         # plan.execute span is the warm sample the obs bridge feeds to
         # cost-model calibration (the cold first call is discarded).

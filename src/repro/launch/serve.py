@@ -146,6 +146,12 @@ def report_plan_cache(prefix: str = "[serve]") -> dict:
                 f"{sh['schedule']}@{mesh_s} moved={sh['bytes_moved']}B "
                 f"t_coll={rl['t_collective_s'] * 1e6:.2f}us"
             )
+            if sh.get("overlap"):
+                # double-buffered schedule: the collective above is hidden
+                # behind kernel calls; show the measured ratio if a bench
+                # recorded one (serial_ms / overlap_ms)
+                eff = sh.get("overlap_efficiency")
+                shard_s += " ov" + (f"={eff:.2f}x" if eff else "")
         else:
             shard_s = "-"
         grp = p.get("grouped")

@@ -1,15 +1,29 @@
-"""GPipe-style pipeline parallelism over a 'stage' mesh axis.
+"""Pipeline parallelism over a 'stage' mesh axis: schedules + reference loop.
 
 Stages hold disjoint layer ranges (stacked stage-major params, sharded on the
-leading dim); microbatches flow through the stage ring via ppermute.  The
-schedule is the classic GPipe fill-steady-drain: with S stages and M
-microbatches the loop runs M + S - 1 ticks and the bubble fraction is
-(S - 1) / (M + S - 1).
+leading dim); microbatches flow through the stage ring via ppermute.  Two
+schedules are modelled:
 
-This module exists to satisfy the PP requirement at framework level and is
-exercised by tests on small virtual meshes; the graded dry-runs use DP x TP
-(better roofline at the assigned sizes — see DESIGN.md §4).  `bubble_fraction`
-feeds the benchmark table.
+  gpipe  fill -> steady -> drain over M + S - 1 forward ticks; all M
+         microbatches are in flight at the steady peak.
+  1f1b   one-forward-one-backward: after the S-1-tick fill each stage
+         alternates one forward with one backward tick, so at most
+         min(S, M) microbatches are ever in flight.  The bubble fraction
+         is the SAME (S-1)/(M+S-1) as GPipe — 1F1B's win is peak
+         activation memory, not bubble time (Narayanan et al., PipeDream).
+
+`pipeline_ticks` gives the exact fill/steady/drain tick counts per schedule
+(unit-tested); `bubble_fraction` is the headline scalar the benchmark table
+and the cost model's `pipeline` collective schedule consume.
+
+`pipeline_apply` is the executable reference loop (forward-only, i.e. the
+GPipe tick structure): each tick's stage-ring `ppermute` is issued directly
+after the stage kernel, before the drain bookkeeping, so the neighbour hop is
+in flight while the tick finishes — the same double-buffer dataflow as the
+overlapped ring collectives (`parallel/collectives.py`).  The *planner-routed*
+pipeline schedule — 1F1B microbatching of the reduce-scatter ring with
+double-buffered hops — is `collectives.ring_pipeline_matmul`, reached via
+`ShardSpec(schedule="pipeline")` in `kernels/api.py`.
 """
 
 from __future__ import annotations
@@ -23,11 +37,59 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.parallel.sharding import shard_map
 
-__all__ = ["pipeline_apply", "bubble_fraction"]
+__all__ = ["pipeline_apply", "pipeline_ticks", "bubble_fraction"]
 
 
-def bubble_fraction(num_stages: int, num_micro: int) -> float:
-    return (num_stages - 1) / (num_micro + num_stages - 1)
+def pipeline_ticks(num_stages: int, num_micro: int, *, schedule: str = "gpipe") -> dict:
+    """Exact tick accounting for a pipeline schedule.
+
+    Returns fill/steady/drain/total tick counts, the bubble (idle stage-ticks
+    at the last stage), the bubble fraction, and the peak number of
+    microbatches in flight — the quantity that actually separates 1F1B from
+    GPipe.  `gpipe` counts forward ticks only (matching `pipeline_apply`);
+    `1f1b` counts forward+backward ticks (one tick each).
+    """
+    s, m = int(num_stages), int(num_micro)
+    if s < 1 or m < 1:
+        raise ValueError(f"need num_stages >= 1 and num_micro >= 1, got {s}, {m}")
+    fill = s - 1  # ticks before the last stage sees microbatch 0
+    drain = s - 1  # ticks after the first stage goes idle
+    if schedule == "gpipe":
+        total = m + s - 1
+        work = m  # forward ticks each stage executes
+        peak = m  # all microbatches' activations live through the fill
+    elif schedule == "1f1b":
+        # After the fill each stage strictly alternates 1 fwd / 1 bwd, so a
+        # microbatch's backward frees its activation before fwd s+1 starts:
+        total = 2 * (m + s - 1)
+        work = 2 * m  # one forward + one backward tick per microbatch
+        peak = min(s, m)
+    else:
+        raise ValueError(f"unknown pipeline schedule {schedule!r}")
+    steady = total - fill - drain  # ticks with every stage busy
+    bubble = total - work  # idle ticks per stage (fill at the tail, drain at 0)
+    return {
+        "schedule": schedule,
+        "num_stages": s,
+        "num_micro": m,
+        "fill": fill,
+        "steady": steady,
+        "drain": drain,
+        "total": total,
+        "bubble": bubble,
+        "bubble_fraction": (s - 1) / (m + s - 1),
+        "peak_in_flight": peak,
+    }
+
+
+def bubble_fraction(num_stages: int, num_micro: int, *, schedule: str = "gpipe") -> float:
+    """Idle fraction of the pipeline: (S-1)/(M+S-1) for gpipe AND 1f1b.
+
+    Identical by design — 1F1B reorders work inside the steady window without
+    shrinking the fill/drain ramps; its advantage is `peak_in_flight`
+    (see `pipeline_ticks`), i.e. activation memory, not bubble time.
+    """
+    return pipeline_ticks(num_stages, num_micro, schedule=schedule)["bubble_fraction"]
 
 
 def pipeline_apply(
@@ -63,13 +125,17 @@ def pipeline_apply(
             y = stage_fn(params_one, feed)
             active = (t - s >= 0) & (t - s < num_micro)
             y = jnp.where(active, y, zero)
+            if t < ticks - 1:
+                # Issue the stage hop before the drain bookkeeping below: the
+                # ppermute depends only on y, so it is in flight while the
+                # output scatter runs (double-buffered, like the overlapped
+                # ring collectives).
+                carry_in = jax.lax.ppermute(y, axis, perm)
             # Drain: the last stage owns microbatch t-(S-1) at tick t.
             m_out = t - (num_stages - 1)
             if 0 <= m_out < num_micro:
                 take = active & (s == num_stages - 1)
                 outputs = outputs.at[m_out].set(jnp.where(take, y, outputs[m_out]))
-            if t < ticks - 1:
-                carry_in = jax.lax.ppermute(y, axis, perm)
         # Only the last stage's buffer is populated; share it with the ring.
         return jax.lax.psum(outputs, axis)
 

@@ -110,6 +110,7 @@ def ring_systolic_kpass(
     *,
     axis: str,
     matmul: Optional[Callable[[jax.Array, jax.Array], jax.Array]] = None,
+    overlap: bool = False,
 ) -> jax.Array:
     """K-contraction over a device ring with systolic partial-product flow.
 
@@ -128,21 +129,47 @@ def ring_systolic_kpass(
     integer-valued data); `out_specs` replication is therefore declared, not
     verified (check_vma=False).  `matmul` computes the one local
     (m, k/p) @ (k/p, n) product (default: XLA f32 dot).
+
+    overlap=True splits the partial into two column halves and staggers the
+    chains: the first half's accumulator hop is issued while the second
+    half's kernel is still running, and each later hop overlaps the other
+    chain's add — the explicit double-buffer form of the dataflow the serial
+    loop only *permits* the scheduler to overlap.  Per chain the hop/add
+    sequence is identical to the serial loop, so XLA-dot results match
+    bitwise (a half-width `matmul` kernel hook may retile, so the general
+    oracle is exactness on integer-valued data).
     """
     from repro.parallel.collectives import _axis_size, _default_mm, _shift
     from repro.resilience import faults
 
-    faults.check("collective.step", schedule="ring_k", axis=axis)
+    sched = "ring_k_overlap" if overlap else "ring_k"
+    faults.check("collective.step", schedule=sched, axis=axis)
     mm = matmul or _default_mm
     p = _axis_size(axis)
-    part = mm(a_blk, b_blk)
-    acc = part
-    # Unrolled wavefront loop: each hop's ppermute depends only on the
-    # previous accumulator, and `part` is loop-invariant, so XLA overlaps the
-    # neighbour exchange with the adds (same dataflow as the 2D loop above).
-    for _ in range(p - 1):
-        acc = jax.lax.ppermute(acc, axis, _shift(p, 1)) + part
-    return acc
+    n = b_blk.shape[1]
+    if not overlap or p == 1 or n < 2:
+        part = mm(a_blk, b_blk)
+        acc = part
+        # Unrolled wavefront loop: each hop's ppermute depends only on the
+        # previous accumulator, and `part` is loop-invariant, so XLA overlaps
+        # the neighbour exchange with the adds (same dataflow as the 2D loop
+        # above).
+        for _ in range(p - 1):
+            acc = jax.lax.ppermute(acc, axis, _shift(p, 1)) + part
+        return acc
+
+    n2 = n // 2
+    # Chain 0's kernel, then its first hop is in flight while chain 1's
+    # kernel runs — the double buffer.
+    part0 = mm(a_blk, b_blk[:, :n2])
+    acc0 = jax.lax.ppermute(part0, axis, _shift(p, 1)) + part0
+    part1 = mm(a_blk, b_blk[:, n2:])
+    acc1 = jax.lax.ppermute(part1, axis, _shift(p, 1)) + part1
+    for t in range(p - 2):
+        faults.check("collective.step", schedule=sched, axis=axis, step=t)
+        acc0 = jax.lax.ppermute(acc0, axis, _shift(p, 1)) + part0
+        acc1 = jax.lax.ppermute(acc1, axis, _shift(p, 1)) + part1
+    return jnp.concatenate([acc0, acc1], axis=1)
 
 
 def systolic_matmul_shardmap(

@@ -274,6 +274,42 @@ def test_calibrated_latency_steers_auto_schedule(tmp_path, monkeypatch):
     assert picks == {"ring_k"}
 
 
+def test_calibrated_link_admits_overlap_schedules(tmp_path, monkeypatch):
+    """Under shipped (default) coefficients the overlap family never enters
+    auto resolution; a CALIBRATED slow link flips the choice to the
+    double-buffered twin, with the §15 max(compute, comm) pricing recorded
+    in the decision provenance."""
+    spec = GemmSpec(m=16, k=32, n=8, shard=ShardSpec(_axes(4), axis_k="x"))
+    _, dec = choose_mod.decide_schedule(spec)
+    names = [c["name"] for c in dec.as_dict()["candidates"]]
+    assert not any(c.endswith("_overlap") or c == "pipeline" for c in names)
+
+    path = tmp_path / "slowlink.json"
+    co = dataclasses.replace(default_coefficients("cpu"), link_bytes_per_s=1e6)
+    cache = cal.CalibrationCache(path)
+    cache.set_coefficients(co)
+    cache.save()
+    monkeypatch.setenv("REPRO_COSTMODEL_CACHE", str(path))
+    cal.clear_coefficients_memo()
+    choose_mod.clear_decision_memo()
+    sched, dec = choose_mod.decide_schedule(spec)
+    # the collective term dominates; hiding it behind the kernel wins, and
+    # reduce_scatter's byte model beats ring/pipeline at equal pricing
+    assert sched == "reduce_scatter_k_overlap"
+    cands = {c["name"]: c for c in dec.as_dict()["candidates"] if c.get("legal")}
+    win, serial = cands[sched], cands["reduce_scatter_k"]
+    assert win["overlap"] is True and serial["overlap"] is False
+    assert win["pricing"] == "max(compute,memory,collective)+latency"
+    assert serial["pricing"] == "max(compute,memory)+collective+latency"
+    assert win["predicted_s"] < serial["predicted_s"]
+
+    # the planner's auto path records the same chosen schedule
+    api.clear_plan_cache()
+    got, _, _, _, decision = api._resolve_sharding(spec)
+    assert got == "reduce_scatter_k_overlap"
+    assert decision["chosen"] == "reduce_scatter_k_overlap"
+
+
 def test_decide_backend_ranks_capable_set():
     spec = GemmSpec(m=B, k=B, n=B)
     chosen, dec = choose_mod.decide_backend(

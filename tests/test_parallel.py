@@ -26,7 +26,7 @@ from repro.parallel.sharding import (
     named_sharding,
     tree_shardings,
 )
-from repro.parallel.pipeline import bubble_fraction
+from repro.parallel.pipeline import bubble_fraction, pipeline_ticks
 from repro.parallel.systolic import phase_counts
 
 
@@ -121,6 +121,31 @@ def test_systolic_phase_counts_track_paper():
 def test_bubble_fraction():
     assert bubble_fraction(4, 12) == pytest.approx(3 / 15)
     assert bubble_fraction(1, 8) == 0.0
+    # 1F1B runs fwd+bwd (2M work units) but fills/drains each phase: the
+    # bubble FRACTION matches GPipe exactly — the win is peak in-flight
+    assert bubble_fraction(4, 12, schedule="1f1b") == pytest.approx(3 / 15)
+
+
+def test_pipeline_ticks_fill_steady_drain():
+    g = pipeline_ticks(4, 12)
+    assert (g["fill"], g["steady"], g["drain"]) == (3, 9, 3)
+    assert g["total"] == 15 and g["bubble"] == 3 and g["peak_in_flight"] == 12
+    f = pipeline_ticks(4, 12, schedule="1f1b")
+    assert (f["fill"], f["steady"], f["drain"]) == (3, 24, 3)
+    assert f["total"] == 30 and f["bubble"] == 6
+    # 1F1B's point: bounded in-flight microbatches (min(stages, micro))
+    assert f["peak_in_flight"] == 4
+    assert pipeline_ticks(4, 2, schedule="1f1b")["peak_in_flight"] == 2
+    # identities: total = fill + steady + drain; bubble/total = fraction
+    for d in (g, f):
+        assert d["total"] == d["fill"] + d["steady"] + d["drain"]
+        assert d["bubble_fraction"] == pytest.approx(d["bubble"] / d["total"])
+    # degenerate single stage: no bubble at all
+    assert pipeline_ticks(1, 8)["bubble"] == 0
+    with pytest.raises(ValueError, match="schedule"):
+        pipeline_ticks(4, 12, schedule="interleaved")
+    with pytest.raises(ValueError):
+        pipeline_ticks(0, 12)
 
 
 # --- multi-device behaviour (subprocess with 4 CPU devices) -------------------
@@ -171,6 +196,64 @@ def test_ring_collective_matmuls_4dev():
             mesh=mesh, in_specs=(P(None, "model"), P("model", None)), out_specs=P("model", None), check_vma=False,
         )
         np.testing.assert_allclose(np.asarray(g(x, w)), np.asarray(x @ w), rtol=1e-4, atol=1e-4)
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_overlapped_collectives_bitwise_4dev():
+    """Every double-buffered helper (overlap=True / ring_pipeline_matmul)
+    reproduces its serial twin bit for bit on integer-valued f32 operands."""
+    out = _run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_local_mesh
+        from repro.parallel.collectives import (
+            ring_allgather_matmul, matmul_ring_reducescatter,
+            ring_pipeline_matmul)
+        from repro.parallel.systolic import ring_systolic_kpass
+        from repro.parallel.sharding import shard_map
+        mesh = make_local_mesh((4,), ("model",))
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.integers(-4, 5, size=(16, 8)).astype(np.float32))
+        w = jnp.asarray(rng.integers(-4, 5, size=(8, 12)).astype(np.float32))
+        ref = np.asarray(x) @ np.asarray(w)
+
+        def run(fn, in_specs, out_specs):
+            f = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+            return np.asarray(f(x, w))
+
+        ag_in = (P("model", None), P())
+        serial = run(lambda xb, wb: ring_allgather_matmul(xb, wb, "model"),
+                     ag_in, P())
+        overlap = run(lambda xb, wb: ring_allgather_matmul(
+            xb, wb, "model", overlap=True), ag_in, P())
+        assert np.array_equal(serial, overlap), "allgather overlap != serial"
+        assert np.array_equal(overlap, ref)
+
+        rs_in = (P(None, "model"), P("model", None))
+        serial = run(lambda xb, wb: matmul_ring_reducescatter(
+            xb, wb, "model"), rs_in, P("model", None))
+        overlap = run(lambda xb, wb: matmul_ring_reducescatter(
+            xb, wb, "model", overlap=True), rs_in, P("model", None))
+        assert np.array_equal(serial, overlap), "reducescatter overlap != serial"
+        assert np.array_equal(overlap, ref)
+
+        serial = run(lambda ab, bb: ring_systolic_kpass(
+            ab, bb, axis="model"), rs_in, P())
+        overlap = run(lambda ab, bb: ring_systolic_kpass(
+            ab, bb, axis="model", overlap=True), rs_in, P())
+        assert np.array_equal(serial, overlap), "kpass overlap != serial"
+        assert np.array_equal(overlap, ref)
+
+        # 1F1B microbatched ring: 8 microbatches = 2 chains of 4 on p=4
+        pipe = run(lambda xb, wb: ring_pipeline_matmul(
+            xb, wb, "model", microbatches=8), rs_in, P("model", None))
+        assert np.array_equal(pipe, ref), "pipeline != reference"
         print("OK")
         """
     )

@@ -232,7 +232,37 @@ def test_schedule_resolution_and_bytes_moved_model():
     )
     sched, local, bytes_moved, _, _ = api._resolve_sharding(spec_ag)
     assert sched == "allgather_a" and local.m == 4
-    assert bytes_moved == 3 * 4 * 32 * 2  # bf16 A chunks hop the ring
+    # f32 RESULT chunks hop the ring (each device computes its rows once);
+    # input dtype no longer enters the byte model
+    assert bytes_moved == 3 * 4 * 8 * 4
+
+    # overlap twins: same byte model, column-half local kernels (ln = n/2)
+    for ov_sched, kw, want_local, want_bytes, want_phases in [
+        ("allgather_a_overlap", {"axis_m": "x"}, (4, 32, 4), 3 * 4 * 8 * 4, 3),
+        ("reduce_scatter_k_overlap", {"axis_k": "x"}, (4, 8, 8), 3 * 4 * 8 * 4, 3),
+        ("ring_k_overlap", {"axis_k": "x"}, (16, 8, 4), 3 * 16 * 8 * 4, 3),
+        # eff_m=16, pk=4 -> mb=4 (even) -> 2 chains of 4 microbatches;
+        # phases = micro - micro/pk = 6, one kernel call per microbatch
+        ("pipeline", {"axis_k": "x"}, (2, 8, 8), 3 * 4 * 8 * 4, 6),
+    ]:
+        spec_ov = GemmSpec(
+            m=16, k=32, n=8, shard=ShardSpec(axes, schedule=ov_sched, **kw)
+        )
+        sched, local, bytes_moved, phases, _ = api._resolve_sharding(spec_ov)
+        assert sched == ov_sched
+        assert (local.m, local.k, local.n) == want_local, (ov_sched, local)
+        assert bytes_moved == want_bytes and phases == want_phases, ov_sched
+
+    # the column-half variants need an even N
+    for ov_sched, kw in [
+        ("allgather_a_overlap", {"axis_m": "x"}),
+        ("ring_k_overlap", {"axis_k": "x"}),
+    ]:
+        with pytest.raises(ValueError, match="must be even"):
+            api._resolve_sharding(
+                GemmSpec(m=16, k=32, n=9,
+                         shard=ShardSpec(axes, schedule=ov_sched, **kw))
+            )
 
     with pytest.raises(ValueError, match="cannot shard K"):
         api._resolve_sharding(
@@ -373,11 +403,31 @@ def _check_numerics_all_schedules():
             (mesh2d, ShardSpec.from_mesh(mesh2d, m="x", n="y"), "replicated"),
             (mesh1d, ShardSpec.from_mesh(mesh1d, m="x", schedule="allgather_a"),
              "allgather_a"),
+            (mesh1d, ShardSpec.from_mesh(mesh1d, m="x",
+                                         schedule="allgather_a_overlap"),
+             "allgather_a_overlap"),
             (mesh1d, ShardSpec.from_mesh(mesh1d, k="x", schedule="reduce_scatter_k"),
              "reduce_scatter_k"),
+            (mesh1d, ShardSpec.from_mesh(mesh1d, k="x",
+                                         schedule="reduce_scatter_k_overlap"),
+             "reduce_scatter_k_overlap"),
             (mesh1d, ShardSpec.from_mesh(mesh1d, k="x", schedule="ring_k"), "ring_k"),
+            (mesh1d, ShardSpec.from_mesh(mesh1d, k="x", schedule="ring_k_overlap"),
+             "ring_k_overlap"),
+            (mesh1d, ShardSpec.from_mesh(mesh1d, k="x", schedule="pipeline"),
+             "pipeline"),
             (mesh1d, ShardSpec.from_mesh(mesh1d, k="x"), "reduce_scatter_k"),  # auto
         ]
+        # per-DEVICE work provenance at p=4: reduce-scatter runs one kernel
+        # per ring step plus the resident chunk; the column-half overlap
+        # twins run two half-width kernels; pipeline runs one per microbatch
+        # (eff_m=24, mb=6 even -> 2 chains x 4 = 8)
+        want_invs = {
+            "replicated": 1, "allgather_a": 1, "allgather_a_overlap": 2,
+            "reduce_scatter_k": 4, "reduce_scatter_k_overlap": 4,
+            "ring_k": 1, "ring_k_overlap": 2, "pipeline": 8,
+        }
+        want_phases = {"replicated": 0, "pipeline": 6}
         for mesh, shard, want_sched in cases:
             spec = GemmSpec.from_operands(
                 a, b, epilogue=epi, blocks=(B, B, B), shard=shard
@@ -389,15 +439,16 @@ def _check_numerics_all_schedules():
                 backend,
                 want_sched,
             )
-            assert p.collective_phases == (0 if want_sched == "replicated" else 3)
-            # per-DEVICE work provenance: ring schedules invoke the local
-            # kernel once per ring step (p=4 here)
+            assert p.collective_phases == want_phases.get(want_sched, 3)
             sh = p.describe()["sharding"]
-            want_inv = 4 if want_sched in ("allgather_a", "reduce_scatter_k") else 1
-            assert sh["kernel_invocations"] == want_inv
-            if want_sched == "allgather_a":
-                # gathering A means every device computes the full product
-                assert sh["per_shard_flops"] == p.flops
+            assert sh["kernel_invocations"] == want_invs[want_sched], want_sched
+            assert sh["overlap"] == (
+                want_sched.endswith("_overlap") or want_sched == "pipeline"
+            )
+            if want_sched.startswith("allgather_a"):
+                # result-gather: every device computes only ITS rows (the
+                # input-rotation form paid p x this)
+                assert sh["per_shard_flops"] == p.flops // 4
 
     # batch handling: 2D b folds batch into the M partition; 3D b replicates
     a3 = _int_mat((2, 4, K), 3)
@@ -456,9 +507,85 @@ def _check_divisibility_and_cache_keying():
     assert api.plan(spec, mesh=m3).local is p1.local
 
 
+def _check_overlap_fault_degrades_to_replicated():
+    """A `collective.step` fault injected MID-double-buffer (step match, so
+    the first ppermute round already ran) degrades the ShardedPlan to
+    replicated execution with identical outputs and a ledger event."""
+    from repro.resilience import faults, ledger
+
+    M, K, N = 24, 16, 12
+    a, b = _int_mat((M, K), 0), _int_mat((K, N), 1)
+    mesh1d = make_local_mesh((4,), ("x",))
+    for sched in ("reduce_scatter_k_overlap", "ring_k_overlap",
+                  "allgather_a_overlap", "pipeline"):
+        api.clear_plan_cache()
+        ledger.clear()
+        want = api.plan(GemmSpec.from_operands(a, b))(a, b)
+        kw = {"m": "x"} if sched.startswith("allgather") else {"k": "x"}
+        p = api.plan(
+            GemmSpec.from_operands(
+                a, b, shard=ShardSpec.from_mesh(mesh1d, schedule=sched, **kw)
+            ),
+            mesh=mesh1d,
+        )
+        step = (0, 1) if sched == "pipeline" else 1
+        with faults.inject(
+            {"collective.step": faults.FaultSpec(
+                times=1, match={"schedule": sched, "step": step})}
+        ):
+            got = p(a, b)
+        assert np.array_equal(np.asarray(got), np.asarray(want)), sched
+        assert p._active == "replicated", sched
+        (ev,) = [e for e in ledger.events("plan.execute")
+                 if e.fallback == "replicated"]
+        assert dict(ev.detail)["schedule"] == repr(sched)
+        # degraded plans keep serving the replicated executor bitwise
+        assert np.array_equal(np.asarray(p(a, b)), np.asarray(want)), sched
+
+
+def _check_async_dispatch_overlaps_plans():
+    """`Plan.dispatch` returns without forcing the value; `execute_async`
+    drains a batch with ONE sync and matches per-plan sync execution
+    bitwise — including sharded overlap plans."""
+    api.clear_plan_cache()
+    M, K, N = 24, 16, 12
+    a, b = _int_mat((M, K), 0), _int_mat((K, N), 1)
+    mesh1d = make_local_mesh((4,), ("x",))
+    p_plain = api.plan(GemmSpec.from_operands(a, b))
+    p_ov = api.plan(
+        GemmSpec.from_operands(
+            a, b,
+            shard=ShardSpec.from_mesh(mesh1d, k="x",
+                                      schedule="ring_k_overlap"),
+        ),
+        mesh=mesh1d,
+    )
+    h = p_plain.dispatch(a, b)
+    assert isinstance(h, api.AsyncResult)
+    assert np.array_equal(np.asarray(h.block()), np.asarray(p_plain(a, b)))
+    outs = api.execute_async([(p_plain, (a, b)), (p_ov, (a, b))])
+    assert len(outs) == 2
+    assert np.array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+
+
 @pytest.mark.slow
 def test_sharded_numerics_bitwise_8dev():
     _multi_or_subprocess(_check_numerics_all_schedules, "_check_numerics_all_schedules")
+
+
+@pytest.mark.slow
+def test_overlap_fault_degrades_to_replicated_8dev():
+    _multi_or_subprocess(
+        _check_overlap_fault_degrades_to_replicated,
+        "_check_overlap_fault_degrades_to_replicated",
+    )
+
+
+@pytest.mark.slow
+def test_async_dispatch_8dev():
+    _multi_or_subprocess(
+        _check_async_dispatch_overlaps_plans, "_check_async_dispatch_overlaps_plans"
+    )
 
 
 @pytest.mark.slow
